@@ -1,0 +1,101 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape) on the single-pod mesh:
+  compute    = dot_flops_per_device / peak
+  memory     = hbm_traffic_per_device / bw   (analytic; see below)
+  collective = collective_bytes_per_device / link_bw
+plus MODEL_FLOPS = 6ND (train) / 2·N_active·tokens (decode/prefill) and the
+useful-compute ratio.
+
+FLOPs and collective bytes come from the scan-aware HLO analysis (XLA's
+cost_analysis counts while bodies once; see launch/hlo_analysis.py).  The
+memory term is analytic — params + optimizer traffic + activation/cache
+traffic — because per-op HBM bytes are not recoverable from the HLO text;
+the compiled memory_analysis (peak residency) is reported alongside.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List, Optional
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.models import SHAPES_BY_NAME
+
+RESULTS = os.environ.get("DRYRUN_DIR", "results/dryrun")
+
+
+def model_flops_per_device(arch: str, shape_name: str, n_dev: int) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    n_active = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        flops = 6.0 * n_active * tokens
+        if cfg.remat == "full":
+            flops *= 8.0 / 6.0            # recompute forward once
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        flops = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence
+        flops = 2.0 * n_active * shape.global_batch
+    return flops / n_dev
+
+
+def hbm_traffic_per_device(arch: str, shape_name: str, res: dict) -> float:
+    """Analytic HBM bytes per device per step (lower bound)."""
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    mem = res.get("memory", {})
+    arg_bytes = mem.get("argument_bytes", 0)
+    if shape.kind == "train":
+        # params read (fwd+bwd+remat) + fp32 opt m/v read+write + grads
+        # arg_bytes ~ state per device (params + opt + ef)
+        return 3.0 * arg_bytes + 2.0 * arg_bytes
+    # serving: read params + read/write cache slice
+    return arg_bytes + mem.get("output_bytes", 0)
+
+
+def rows(multi_pod: bool = False) -> List[dict]:
+    out = []
+    tag = "2pod" if multi_pod else "1pod"
+    n_dev = 512 if multi_pod else 256
+    for arch in ARCH_IDS:
+        for shape in ("train_4k", "prefill_32k", "decode_32k", "long_500k"):
+            path = os.path.join(RESULTS, f"{arch}.{shape}.{tag}.json")
+            if not os.path.exists(path):
+                continue
+            r = json.load(open(path))
+            if r["status"] == "skipped":
+                out.append({"name": f"{arch}/{shape}", "status": "skipped",
+                            "reason": r["reason"][:60]})
+                continue
+            if r["status"] != "ok":
+                out.append({"name": f"{arch}/{shape}", "status": "ERROR",
+                            "reason": r.get("error", "?")[:80]})
+                continue
+            sa = r.get("scan_aware", {})
+            flops = sa.get("dot_flops", 0.0) + sa.get("conv_flops", 0.0)
+            coll = sa.get("collective_bytes", 0.0)
+            t_comp = flops / PEAK_FLOPS_BF16
+            t_mem = hbm_traffic_per_device(arch, shape, r) / HBM_BW
+            t_coll = coll / ICI_BW
+            dom = max((t_comp, "compute"), (t_mem, "memory"),
+                      (t_coll, "collective"))[1]
+            mf = model_flops_per_device(arch, shape, n_dev)
+            out.append({
+                "name": f"{arch}/{shape}", "status": "ok",
+                "t_compute_s": round(t_comp, 4),
+                "t_memory_s": round(t_mem, 4),
+                "t_collective_s": round(t_coll, 4),
+                "bottleneck": dom,
+                "model_flops_ratio": round(mf / flops, 3) if flops else None,
+                "roofline_frac": round(
+                    max(t_comp, t_mem, t_coll) and
+                    t_comp / max(t_comp, t_mem, t_coll), 3),
+                "peak_gb": round(r["memory"].get("peak_bytes", 0) / 1e9, 2)
+                if isinstance(r.get("memory"), dict) else None,
+            })
+    return out

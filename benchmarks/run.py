@@ -1,0 +1,98 @@
+"""Benchmark harness — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick|--full] [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV rows per the harness contract and
+writes the full row dicts to results/bench/*.json.  Sections:
+
+  table2      baseline FCFS/EASY                    (paper Table II)
+  fig6        6 mechanisms x W1-W5                  (paper Figure 6)
+  fig7        checkpoint frequency sweep            (paper Figure 7)
+  obs10       decision latency                      (paper Obs 10)
+  roofline    per (arch x shape) roofline terms     (EXPERIMENTS §Roofline)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+from . import bench_decision, bench_roofline, bench_scheduler
+
+OUT = "results/bench"
+
+
+def _emit(section: str, rows, t0: float) -> None:
+    os.makedirs(OUT, exist_ok=True)
+    with open(os.path.join(OUT, f"{section}.json"), "w") as f:
+        json.dump(rows, f, indent=1, default=str)
+    if isinstance(rows, dict):
+        rows = [rows]
+    for r in rows:
+        us = r.get("us_per_call")
+        if us is None:
+            us = round(r.get("seconds", time.perf_counter() - t0) * 1e6, 1)
+        derived = r.get("derived") or ",".join(
+            f"{k}={v:.4g}" for k, v in r.items()
+            if isinstance(v, (int, float)) and k not in
+            ("seconds", "us_per_call"))
+        print(f"{r.get('name', section)},{us},{derived}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small workloads (CI)")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale averaging (10 traces)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+    seeds = (0,) if args.quick else tuple(range(10)) if args.full else (0, 1, 2)
+    n_jobs = 300 if args.quick else 900 if args.full else 600
+
+    want = lambda s: args.only is None or args.only == s
+    failures = []
+
+    base = None
+    mech_rows = None
+    if want("table2"):
+        t0 = time.perf_counter()
+        base = bench_scheduler.bench_baseline(seeds=seeds, n_jobs=n_jobs)
+        _emit("table2", base, t0)
+    if want("fig6"):
+        t0 = time.perf_counter()
+        mech_rows = bench_scheduler.bench_mechanisms(seeds=seeds,
+                                                     n_jobs=n_jobs)
+        _emit("fig6", mech_rows, t0)
+    if base is not None and mech_rows is not None:
+        fails = bench_scheduler.validate_observations(base, mech_rows)
+        for f in fails:
+            print(f"VALIDATION-FAIL,{f}", file=sys.stderr)
+        failures += fails
+        if not fails:
+            print("validate_observations,0,all paper observations hold")
+    if want("fig7"):
+        t0 = time.perf_counter()
+        rows = bench_scheduler.bench_checkpoint(
+            seeds=seeds[:2], n_jobs=n_jobs)
+        _emit("fig7", rows, t0)
+    if want("obs10"):
+        t0 = time.perf_counter()
+        rows = bench_decision.bench_decision_kernels()
+        rows.append(bench_decision.bench_decision_e2e())
+        _emit("obs10", rows, t0)
+    if want("roofline"):
+        t0 = time.perf_counter()
+        rows = bench_roofline.rows(multi_pod=False)
+        if rows:
+            _emit("roofline", rows, t0)
+        else:
+            print("roofline,0,no dry-run artifacts found (run "
+                  "repro.launch.dryrun first)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

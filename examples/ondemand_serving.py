@@ -1,0 +1,59 @@
+"""On-demand serving: batched prefill+decode through the ServeEngine.
+
+    PYTHONPATH=src python examples/ondemand_serving.py
+
+This is the execution payload of the paper's *on-demand* job class: a
+burst of requests arrives, must start instantly, runs batched greedy
+decoding, reports first-token and completion latencies.
+"""
+import time
+
+import numpy as np
+import jax
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.models import init_params
+from repro.models.config import ModelConfig
+from repro.serving import Request, ServeEngine
+
+
+def main():
+    cfg = ModelConfig(name="serve-demo", family="dense", n_layers=4,
+                      d_model=256, n_heads=4, n_kv=2, d_ff=1024, vocab=4096,
+                      tie_embeddings=True, param_dtype="float32",
+                      compute_dtype="float32", attn_block_q=64,
+                      attn_block_kv=64)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    engine = ServeEngine(cfg, params, max_seq=256)
+
+    rng = np.random.default_rng(0)
+    burst = [Request(rid=i,
+                     prompt=rng.integers(0, cfg.vocab, rng.integers(8, 64),
+                                         dtype=np.int32),
+                     max_new_tokens=24)
+             for i in range(8)]
+    print(f"burst of {len(burst)} on-demand requests "
+          f"(prompt lens {[len(r.prompt) for r in burst]})")
+    t0 = time.time()
+    engine.serve_batch(burst)
+    for r in burst:
+        ttfb = (r.first_token_at - r.submitted_at) * 1e3
+        total = (r.done_at - r.submitted_at) * 1e3
+        print(f"req {r.rid}: {len(r.tokens_out)} tokens, "
+              f"ttfb={ttfb:.0f}ms total={total:.0f}ms "
+              f"head={r.tokens_out[:5]}")
+    n_tok = sum(len(r.tokens_out) for r in burst)
+    print(f"batch done: {n_tok} tokens in {time.time()-t0:.2f}s")
+    # determinism check: same batch, same greedy outputs
+    burst2 = [Request(rid=r.rid, prompt=r.prompt,
+                      max_new_tokens=r.max_new_tokens) for r in burst]
+    engine.serve_batch(burst2)
+    assert all(a.tokens_out == b.tokens_out for a, b in zip(burst, burst2)), \
+        "greedy decode must be deterministic"
+    print("determinism check passed")
+
+
+if __name__ == "__main__":
+    main()

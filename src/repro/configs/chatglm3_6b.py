@@ -1,0 +1,9 @@
+"""chatglm3-6b [dense] — RoPE 2d (half-dim rotary), GQA kv=2 [arXiv:2406.12793; hf]."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="chatglm3-6b", family="dense",
+    n_layers=28, d_model=4096, n_heads=32, n_kv=2, d_ff=13696, vocab=65024,
+    rope_fraction=0.5,
+    fsdp=True, remat="full", train_microbatches=8,
+)

@@ -1,0 +1,34 @@
+"""Hybrid workload scheduling on HPC systems (Fan et al., 2021) — core.
+
+Public API:
+    JobSpec / JobType / NoticeKind   job model (paper §III-A)
+    SimConfig / Simulator            event-driven scheduler (§III-B)
+    MECHANISMS                       the six mechanisms N/CUA/CUP x PAA/SPAA
+    WorkloadConfig / generate        Theta-like trace synthesis (§IV-A)
+    Metrics / collect                evaluation metrics (§IV-D)
+    run_mechanism                    one-call simulation entry point
+"""
+from .job import JobSpec, JobType, NoticeKind, RunState
+from .cluster import Lease, NodeLedger
+from .decision import (apportion_shrink, expected_releases_before,
+                       select_preemption_victims)
+from .simulator import MECHANISMS, JobRecord, SimConfig, Simulator
+from .workload import NOTICE_MIXES, WorkloadConfig, daly_interval, generate
+from .metrics import Metrics, collect
+
+
+def run_mechanism(mechanism: str, jobs, n_nodes: int, **cfg_kw) -> "Metrics":
+    """Simulate `jobs` under one mechanism and return its metrics."""
+    sim = Simulator(SimConfig(n_nodes=n_nodes, mechanism=mechanism, **cfg_kw),
+                    [j for j in jobs])
+    sim.run()
+    return collect(sim)
+
+
+__all__ = [
+    "JobSpec", "JobType", "NoticeKind", "RunState", "Lease", "NodeLedger",
+    "apportion_shrink", "expected_releases_before", "select_preemption_victims",
+    "MECHANISMS", "JobRecord", "SimConfig", "Simulator",
+    "NOTICE_MIXES", "WorkloadConfig", "daly_interval", "generate",
+    "Metrics", "collect", "run_mechanism",
+]

@@ -1,0 +1,81 @@
+"""Vectorized decision kernels (paper §II-C "quick decision making").
+
+The two hot decisions — PAA victim selection and SPAA shrink apportionment —
+are O(running jobs) numpy operations so a full-system decision stays well
+under the paper's 10 ms bound (Obs. 10); benchmarked in bench_decision.py.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+
+def select_preemption_victims(
+    sizes: Sequence[int],
+    overheads: Sequence[float],
+    need: int,
+) -> Tuple[List[int], int]:
+    """PAA victim selection.
+
+    Sort candidates by ascending preemption overhead (node-seconds wasted)
+    and take a prefix until the freed nodes cover `need`.
+
+    Returns (victim indices in preemption order, surplus nodes beyond need).
+    If the total supply cannot cover `need`, returns ([], 0) — the paper
+    then queues the on-demand job at the front instead of preempting.
+    """
+    sizes_a = np.asarray(sizes, dtype=np.int64)
+    over_a = np.asarray(overheads, dtype=np.float64)
+    if sizes_a.sum() < need:
+        return [], 0
+    if need <= 0:
+        return [], 0
+    order = np.argsort(over_a, kind="stable")
+    csum = np.cumsum(sizes_a[order])
+    cut = int(np.searchsorted(csum, need)) + 1
+    victims = order[:cut]
+    surplus = int(csum[cut - 1]) - need
+    return [int(i) for i in victims], surplus
+
+
+def apportion_shrink(
+    cur_sizes: Sequence[int],
+    min_sizes: Sequence[int],
+    need: int,
+) -> List[int]:
+    """SPAA: shrink running malleables "evenly" to free `need` nodes.
+
+    Each job contributes proportionally to its shrinkable slack
+    (cur - min), integerized by largest remainder so that the total equals
+    `need` exactly.  Returns per-job nodes to shed; empty list if the slack
+    cannot cover `need` (caller falls back to PAA, paper §III-B2).
+    """
+    cur = np.asarray(cur_sizes, dtype=np.int64)
+    mn = np.asarray(min_sizes, dtype=np.int64)
+    slack = np.maximum(cur - mn, 0)
+    supply = int(slack.sum())
+    if supply < need or need <= 0:
+        return [] if need > 0 else [0] * len(cur)
+    quota = need * slack / supply
+    base = np.floor(quota).astype(np.int64)
+    base = np.minimum(base, slack)
+    short = need - int(base.sum())
+    if short > 0:
+        frac = np.where(slack - base > 0, quota - base, -np.inf)
+        # largest remainders get the leftover node each
+        top = np.argsort(-frac, kind="stable")[:short]
+        base[top] += 1
+    assert int(base.sum()) == need and np.all(base <= slack)
+    return [int(x) for x in base]
+
+
+def expected_releases_before(
+    est_ends: Sequence[float],
+    sizes: Sequence[int],
+    horizon: float,
+) -> int:
+    """CUP planning: nodes expected to free up before `horizon`."""
+    ends = np.asarray(est_ends, dtype=np.float64)
+    szs = np.asarray(sizes, dtype=np.int64)
+    return int(szs[ends <= horizon].sum())

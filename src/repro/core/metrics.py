@@ -1,0 +1,73 @@
+"""Evaluation metrics (paper §IV-D)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from .job import JobType
+from .simulator import JobRecord, Simulator
+
+
+@dataclass
+class Metrics:
+    avg_turnaround_h: float
+    avg_turnaround_rigid_h: float
+    avg_turnaround_malleable_h: float
+    avg_turnaround_od_h: float
+    system_utilization: float
+    od_instant_start_rate: float
+    preemption_ratio_rigid: float
+    preemption_ratio_malleable: float
+    shrink_ratio_malleable: float
+    n_completed: int
+    n_jobs: int
+    decision_p99_ms: Optional[float] = None
+
+    def as_dict(self) -> Dict[str, float]:
+        return {k: v for k, v in self.__dict__.items() if v is not None}
+
+
+def _avg_turnaround(recs: List[JobRecord]) -> float:
+    ts = [r.turnaround for r in recs if r.turnaround is not None]
+    return float(np.mean(ts)) / 3600.0 if ts else float("nan")
+
+
+def collect(sim: Simulator) -> Metrics:
+    recs = list(sim.records.values())
+    by_type = {t: [r for r in recs if r.job.jtype is t] for t in JobType}
+    od = by_type[JobType.ONDEMAND]
+    rigid = by_type[JobType.RIGID]
+    mall = by_type[JobType.MALLEABLE]
+
+    horizon = sim.finish_time() - min(r.job.submit_time for r in recs)
+    useful = sim.occupied_integral - sim.waste_node_seconds
+    util = useful / (sim.cfg.n_nodes * horizon) if horizon > 0 else float("nan")
+
+    def _instant(r: JobRecord) -> bool:
+        if r.first_start is None:
+            return False
+        return (r.first_start - r.job.submit_time) <= sim.cfg.instant_eps
+
+    dec = None
+    if sim.decision_times:
+        dec = float(np.percentile(np.array(sim.decision_times) * 1e3, 99))
+    return Metrics(
+        avg_turnaround_h=_avg_turnaround(recs),
+        avg_turnaround_rigid_h=_avg_turnaround(rigid),
+        avg_turnaround_malleable_h=_avg_turnaround(mall),
+        avg_turnaround_od_h=_avg_turnaround(od),
+        system_utilization=util,
+        od_instant_start_rate=(float(np.mean([_instant(r) for r in od]))
+                               if od else float("nan")),
+        preemption_ratio_rigid=(float(np.mean([r.n_preempted > 0 for r in rigid]))
+                                if rigid else float("nan")),
+        preemption_ratio_malleable=(float(np.mean([r.n_preempted > 0 for r in mall]))
+                                    if mall else float("nan")),
+        shrink_ratio_malleable=(float(np.mean([r.n_shrunk > 0 for r in mall]))
+                                if mall else float("nan")),
+        n_completed=sum(r.completion is not None for r in recs),
+        n_jobs=len(recs),
+        decision_p99_ms=dec,
+    )

@@ -1,0 +1,660 @@
+"""Event-driven hybrid-workload scheduling simulator (CQSim-equivalent).
+
+Implements the paper's six mechanisms as {notice} x {arrival} strategies:
+
+    notice  : N (nothing) | CUA (collect-until-actual-arrival)
+              | CUP (collect-until-predicted-arrival, planned preemption)
+    arrival : PAA (preempt ascending overhead) | SPAA (shrink-then-PAA)
+
+plus the lifecycle rules: lease return at on-demand completion and
+reservation release 10 min after a no-show's estimated arrival.  Waiting
+jobs are ordered by FCFS and started with EASY backfilling; reserved nodes
+may host backfilled jobs that are preempted the instant the on-demand job
+arrives (paper §III-B1).
+
+The simulator is baseline-faithful: with mechanism="BASE" every job is
+treated as a plain batch job under FCFS/EASY (paper Table II).
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import math
+import time as _walltime
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from .cluster import Lease, NodeLedger
+from .decision import (apportion_shrink, expected_releases_before,
+                       select_preemption_victims)
+from .job import JobSpec, JobType, NoticeKind, RunState
+
+NOTICE_POLICIES = ("N", "CUA", "CUP")
+ARRIVAL_POLICIES = ("PAA", "SPAA")
+MECHANISMS = tuple(f"{n}&{a}" for n in NOTICE_POLICIES for a in ARRIVAL_POLICIES)
+
+
+@dataclass
+class SimConfig:
+    n_nodes: int
+    mechanism: str = "CUA&SPAA"          # "BASE" or one of MECHANISMS
+    release_threshold: float = 600.0      # release reservation 10 min past est
+    malleable_warning: float = 120.0      # Amazon-style 2-min warning
+    backfill_depth: int = 100
+    allow_reserved_backfill: bool = True
+    instant_eps: float = 1.0              # wait <= eps counts as instant start
+    track_decision_time: bool = False
+
+    @property
+    def notice_policy(self) -> str:
+        return "BASE" if self.mechanism == "BASE" else self.mechanism.split("&")[0]
+
+    @property
+    def arrival_policy(self) -> str:
+        return "BASE" if self.mechanism == "BASE" else self.mechanism.split("&")[1]
+
+
+@dataclass
+class JobRecord:
+    job: JobSpec
+    first_start: Optional[float] = None
+    completion: Optional[float] = None
+    killed: bool = False
+    n_preempted: int = 0
+    n_shrunk: int = 0
+    instant: bool = False
+
+    @property
+    def turnaround(self) -> Optional[float]:
+        if self.completion is None:
+            return None
+        return self.completion - self.job.submit_time
+
+
+class Simulator:
+    """One simulation run over a fixed job list."""
+
+    def __init__(self, cfg: SimConfig, jobs: List[JobSpec]):
+        assert cfg.mechanism == "BASE" or cfg.mechanism in MECHANISMS, cfg.mechanism
+        self.cfg = cfg
+        self.jobs: Dict[int, JobSpec] = {j.jid: j for j in jobs}
+        self.ledger = NodeLedger(cfg.n_nodes)
+        self.now = 0.0
+        self._heap: List[Tuple[float, int, str, tuple]] = []
+        self._seq = itertools.count()
+        self.queue: List[int] = []           # waiting jids
+        self.running: Dict[int, RunState] = {}
+        self.records: Dict[int, JobRecord] = {j.jid: JobRecord(j) for j in jobs}
+        self.od_status: Dict[int, str] = {}  # noticed|arrived|timeout|done
+        self.collecting: List[int] = []      # od jids collecting releases (notice order)
+        self.od_front: Dict[int, bool] = {}  # arrived ods waiting at queue front
+        self.leases: Dict[int, List[Lease]] = {}
+        self.progress: Dict[int, dict] = {}  # preempted-job carry-over state
+        self.est_remaining: Dict[int, float] = {j.jid: j.t_estimate for j in jobs}
+        self._epochs: Dict[int, int] = {}    # monotonic per-jid END epoch
+        # metrics accumulators
+        self.occupied_integral = 0.0
+        self.waste_node_seconds = 0.0
+        self._last_t = 0.0
+        self.decision_times: List[float] = []
+        self._in_schedule = False
+
+        for j in jobs:
+            self._push(j.submit_time, "submit", (j.jid,))
+            if (j.jtype is JobType.ONDEMAND and j.notice_kind is not NoticeKind.NONE
+                    and cfg.mechanism != "BASE"):
+                self._push(j.notice_time, "notice", (j.jid,))
+                self._push(j.est_arrival + cfg.release_threshold,
+                           "od_timeout", (j.jid,))
+
+    # ------------------------------------------------------------------ events
+    def _push(self, t: float, kind: str, data: tuple) -> None:
+        heapq.heappush(self._heap, (t, next(self._seq), kind, data))
+
+    def _advance(self, t: float) -> None:
+        assert t >= self.now - 1e-9
+        self.occupied_integral += self.ledger.occupied * max(0.0, t - self._last_t)
+        self._last_t = t
+        self.now = max(self.now, t)
+
+    def run(self) -> Dict[int, JobRecord]:
+        while self._heap:
+            t, _, kind, data = heapq.heappop(self._heap)
+            self._advance(t)
+            getattr(self, f"_on_{kind}")(*data)
+            self.ledger.check()
+        return self.records
+
+    # ------------------------------------------------------------- submission
+    def _on_submit(self, jid: int) -> None:
+        job = self.jobs[jid]
+        if job.jtype is JobType.ONDEMAND and self.cfg.mechanism != "BASE":
+            self._od_arrival(jid)
+        else:
+            self.queue.append(jid)
+            self._schedule()
+
+    # ---------------------------------------------------------- advance notice
+    def _on_notice(self, jid: int) -> None:
+        job = self.jobs[jid]
+        if self.od_status.get(jid) is not None:
+            return  # already arrived (defensive)
+        self.od_status[jid] = "noticed"
+        pol = self.cfg.notice_policy
+        if pol == "N":
+            return
+        got = self.ledger.reserve_from_free(jid, job.size)
+        if got < job.size:
+            self.collecting.append(jid)
+            if pol == "CUP":
+                self._cup_plan(jid)
+
+    def _cup_plan(self, jid: int) -> None:
+        """Plan preemptions so the od job's demand is met by est_arrival."""
+        job = self.jobs[jid]
+        need = job.size - self.ledger.reserved_of(jid)
+        ends, sizes = [], []
+        for rs in self.running.values():
+            ends.append(self._est_end(rs))
+            sizes.append(rs.cur_size)
+        need -= expected_releases_before(ends, sizes, job.est_arrival)
+        if need <= 0:
+            return
+        # candidates: rigid right after an upcoming checkpoint (cheap), then
+        # malleables at est_arrival - warning, then any rigid at est_arrival.
+        cand: List[Tuple[float, float, int]] = []  # (overhead, preempt_t, jid)
+        for rid, rs in self.running.items():
+            j = rs.job
+            if j.jtype is JobType.ONDEMAND:
+                continue
+            if j.jtype is JobType.MALLEABLE:
+                t_p = max(self.now, job.est_arrival - self.cfg.malleable_warning)
+                cand.append((j.t_setup * j.size, t_p, rid))
+            else:
+                nc = rs.next_ckpt_completion(self.now)
+                if nc is not None and nc <= job.est_arrival:
+                    cand.append((j.t_setup * j.size, nc, rid))
+                else:
+                    t_p = max(self.now, job.est_arrival - 1.0)
+                    lost = rs.work_done(t_p) - rs.checkpointed_work(t_p)
+                    cand.append((j.t_setup * j.size + max(lost, 0.0), t_p, rid))
+        cand.sort()
+        for overhead, t_p, rid in cand:
+            if need <= 0:
+                break
+            rs = self.running.get(rid)
+            if rs is None:
+                continue
+            self._push(t_p, "planned_preempt", (jid, rid, rs.epoch))
+            need -= rs.cur_size
+
+    def _on_planned_preempt(self, od_jid: int, victim: int, epoch: int) -> None:
+        if self.od_status.get(od_jid) != "noticed":
+            return  # arrived or timed out; plan void
+        rs = self.running.get(victim)
+        if rs is None or rs.epoch != epoch:
+            return
+        od = self.jobs[od_jid]
+        if self.ledger.reserved_of(od_jid) >= od.size:
+            return  # demand already met by collected releases
+        self._preempt(victim, beneficiary=od_jid)
+        self._schedule()
+
+    def _on_od_timeout(self, jid: int) -> None:
+        if self.od_status.get(jid) != "noticed":
+            return
+        self.od_status[jid] = "timeout"
+        if jid in self.collecting:
+            self.collecting.remove(jid)
+        self.ledger.release_reservation(jid)
+        self._schedule()
+
+    # ------------------------------------------------------------- od arrival
+    def _od_arrival(self, jid: int) -> None:
+        job = self.jobs[jid]
+        prev = self.od_status.get(jid)
+        self.od_status[jid] = "arrived"
+        if jid in self.collecting:
+            self.collecting.remove(jid)
+        t0 = _walltime.perf_counter()
+        # 1. evict backfilled borrowers of this reservation immediately.
+        for rid in [r for r, rs in self.running.items() if rs.borrowed.get(jid)]:
+            self._preempt(rid, beneficiary=jid)
+        need = job.size - self.ledger.reserved_of(jid) - self.ledger.free
+        started = False
+        if need <= 0:
+            self._start_od(jid)
+            started = True
+        else:
+            pol = self.cfg.arrival_policy
+            if pol == "SPAA":
+                started = self._try_shrink(jid, need)
+            if not started:
+                started = self._try_paa(jid, need)
+        if self.cfg.track_decision_time:
+            self.decision_times.append(_walltime.perf_counter() - t0)
+        if started:
+            rec = self.records[jid]
+            rec.instant = (rec.first_start - job.submit_time) <= self.cfg.instant_eps
+        else:
+            # cannot start instantly: head of queue + collect every release.
+            self.od_front[jid] = True
+            self.queue.append(jid)
+            if jid not in self.collecting:
+                self.collecting.append(jid)
+        self._schedule()
+
+    def _try_shrink(self, jid: int, need: int) -> bool:
+        """SPAA: shrink running malleables evenly; False if supply too small."""
+        mall = [(rid, rs) for rid, rs in self.running.items()
+                if rs.job.jtype is JobType.MALLEABLE and rs.cur_size > rs.job.n_min]
+        if not mall:
+            return False
+        sheds = apportion_shrink([rs.cur_size for _, rs in mall],
+                                 [rs.job.n_min for _, rs in mall], need)
+        if not sheds:
+            return False
+        for (rid, _), k in zip(mall, sheds):
+            if k > 0:
+                self._shrink(rid, k, jid)
+        self._start_od(jid)
+        return True
+
+    def _try_paa(self, jid: int, need: int) -> bool:
+        """PAA: preempt running jobs in ascending preemption-overhead order."""
+        cand = [(rid, rs) for rid, rs in self.running.items()
+                if rs.job.jtype is not JobType.ONDEMAND]
+        # nodes borrowed from other reservations return to their owners, not
+        # to this job: only the un-borrowed remainder counts as supply.
+        supply = [rs.cur_size - sum(rs.borrowed.values()) for _, rs in cand]
+        victims, _ = select_preemption_victims(
+            supply, [rs.preemption_overhead(self.now) for _, rs in cand], need)
+        if not victims and need > 0:
+            return False
+        for i in victims:
+            self._preempt(cand[i][0], beneficiary=jid)
+        job = self.jobs[jid]
+        if self.ledger.reserved_of(jid) + self.ledger.free < job.size:
+            return False  # borrowed-node routing starved us; wait in queue
+        self._start_od(jid)
+        return True
+
+    def _start_od(self, jid: int) -> None:
+        job = self.jobs[jid]
+        res = self.ledger.reserved_of(jid)
+        take_res = min(res, job.size)
+        from_free = job.size - take_res
+        assert from_free <= self.ledger.free
+        self.ledger.allocate(job.size, from_free=from_free,
+                             od=jid if take_res else None, from_reserved=take_res)
+        self.ledger.release_reservation(jid)  # return any surplus reservation
+        if jid in self.collecting:
+            self.collecting.remove(jid)
+        self._begin_run(jid, job.size)
+        self.od_front.pop(jid, None)
+
+    # -------------------------------------------------- preempt / shrink / expand
+    def _preempt(self, jid: int, beneficiary: Optional[int] = None) -> None:
+        """Vacate a running job; nodes go to `beneficiary`'s reservation."""
+        rs = self.running.pop(jid)
+        job = rs.job
+        rec = self.records[jid]
+        rec.n_preempted += 1
+        if job.jtype is JobType.MALLEABLE:
+            done = rs.work_done(self.now)   # 2-min warning checkpoint
+            ckpt = done
+            self.waste_node_seconds += job.t_setup * job.size
+        else:
+            done = rs.work_done(self.now)
+            ckpt = rs.checkpointed_work(self.now)
+            self.waste_node_seconds += (done - ckpt) + job.t_setup * job.size
+            done = ckpt                     # recompute from last checkpoint
+        self.progress[jid] = {"done_work": done, "ckpt_work": ckpt,
+                              "n_starts": rs.n_starts}
+        # paper: updated runtime estimate, original submit time kept.
+        slack = max(1.0, job.t_estimate / max(job.t_actual, 1.0))
+        rem = max(job.work - done, 0.0) / job.size
+        if job.jtype is JobType.RIGID and math.isfinite(job.ckpt_interval):
+            rem += math.floor(rem / job.ckpt_interval) * job.ckpt_overhead
+        self.est_remaining[jid] = job.t_setup + rem * slack + 60.0
+        # ---- node routing: borrowed -> owners, rest -> beneficiary/releases
+        freed = rs.cur_size
+        for od, k in rs.borrowed.items():
+            k = min(k, freed)
+            if self.od_status.get(od) == "noticed":
+                self.ledger.occupied_to_reserved(od, k)
+            else:
+                self.ledger.free_nodes(k)
+            freed -= k
+        if beneficiary is not None and freed > 0:
+            bj = self.jobs[beneficiary]
+            want = max(0, bj.size - self.ledger.reserved_of(beneficiary))
+            k = min(want, freed)
+            if k > 0:
+                self.ledger.occupied_to_reserved(beneficiary, k)
+                self._lease(beneficiary, jid, k, "preempt")
+                freed -= k
+        if freed > 0:
+            self._route_release(freed)
+        self._epochs[jid] = self._epochs.get(jid, 0) + 1  # invalidate pending END
+        self.queue.append(jid)  # resubmitted; FCFS key keeps original submit
+
+    def _shrink(self, jid: int, k: int, od: int) -> None:
+        rs = self.running[jid]
+        assert rs.cur_size - k >= rs.job.n_min
+        rs.work_at_resize = rs.work_done(self.now)
+        rs.last_resize = max(self.now, rs.last_resize)
+        rs.cur_size -= k
+        rs.shrunk_by[od] = rs.shrunk_by.get(od, 0) + k
+        self.records[jid].n_shrunk += 1
+        self.ledger.occupied_to_reserved(od, k)
+        self._lease(od, jid, k, "shrink")
+        self._reschedule_end(jid)
+
+    def _expand(self, jid: int, k: int) -> None:
+        """Give k already-accounted (occupied) nodes back to a shrunk job."""
+        rs = self.running[jid]
+        grow = min(k, rs.job.n_max - rs.cur_size)
+        if grow < k:  # cannot absorb everything; spill to free pool
+            self.ledger.free_nodes(k - grow)
+        if grow <= 0:
+            return
+        rs.work_at_resize = rs.work_done(self.now)
+        rs.last_resize = max(self.now, rs.last_resize)
+        rs.cur_size += grow
+        self._reschedule_end(jid)
+
+    def _lease(self, od: int, lender: int, k: int, kind: str) -> None:
+        self.leases.setdefault(od, []).append(Lease(lender, k, kind))
+
+    # --------------------------------------------------------------- run / end
+    def _begin_run(self, jid: int, size: int) -> None:
+        job = self.jobs[jid]
+        carry = self.progress.pop(jid, None)
+        rs = RunState(job=job, start_time=self.now, cur_size=size)
+        if carry:
+            rs.done_work = carry["done_work"]
+            rs.ckpt_work = carry["ckpt_work"]
+            rs.n_starts = carry["n_starts"] + 1
+            rs.work_at_resize = rs.done_work
+        self.running[jid] = rs
+        rec = self.records[jid]
+        if rec.first_start is None:
+            rec.first_start = self.now
+        self._reschedule_end(jid)
+
+    def _est_end(self, rs: RunState) -> float:
+        """Estimated end used by EASY/CUP (user estimate, not actual)."""
+        start = rs.last_resize - rs.job.t_setup
+        est = self.est_remaining[rs.job.jid]
+        if rs.job.jtype is JobType.MALLEABLE:
+            est = rs.job.t_setup + (est - rs.job.t_setup) * rs.job.n_max / max(rs.cur_size, 1)
+        return max(start + est, self.now)
+
+    def _reschedule_end(self, jid: int) -> None:
+        rs = self.running[jid]
+        self._epochs[jid] = self._epochs.get(jid, 0) + 1
+        rs.epoch = self._epochs[jid]
+        natural = rs.natural_end(self.now)
+        kill = self._est_end(rs)
+        self._push(min(natural, max(kill, self.now)), "end", (jid, rs.epoch))
+
+    def _on_end(self, jid: int, epoch: int) -> None:
+        rs = self.running.get(jid)
+        if rs is None or rs.epoch != epoch:
+            return
+        job = rs.job
+        done = rs.work_done(self.now)
+        killed = done < job.work - 1e-6
+        del self.running[jid]
+        rec = self.records[jid]
+        rec.completion = self.now
+        rec.killed = killed
+        # vacate: borrowed -> owners, rest routed to collectors/free
+        freed = rs.cur_size
+        for od, k in rs.borrowed.items():
+            k = min(k, freed)
+            if self.od_status.get(od) == "noticed":
+                self.ledger.occupied_to_reserved(od, k)
+            else:
+                self.ledger.free_nodes(k)
+            freed -= k
+        if job.jtype is JobType.ONDEMAND:
+            self.od_status[jid] = "done"
+            freed = self._repay_leases(jid, freed)
+        if freed > 0:
+            self._route_release(freed)
+        self._schedule()
+
+    def _repay_leases(self, od: int, avail: int) -> int:
+        """Return leased nodes to lenders (paper §III-B3)."""
+        for lease in self.leases.pop(od, []):
+            k = min(lease.nodes, avail)
+            if k <= 0:
+                break
+            lender = lease.lender
+            rs = self.running.get(lender)
+            if rs is not None and lease.kind == "shrink" and rs.shrunk_by.get(od):
+                give = min(k, rs.shrunk_by[od])
+                rs.shrunk_by[od] -= give
+                self._expand(lender, give)   # stays "occupied"
+                avail -= give
+                k -= give
+            if k > 0 and lender in self.queue:
+                self.ledger.occupied_to_hold(lender, k)
+                avail -= k
+            # lender finished or not expandable: nodes stay in `avail`
+        return avail
+
+    def _route_release(self, k: int) -> None:
+        """Vacated occupied nodes -> collecting reservations, then free pool."""
+        assert k >= 0
+        for od in list(self.collecting):
+            if k == 0:
+                break
+            job = self.jobs[od]
+            want = job.size - self.ledger.reserved_of(od)
+            take = min(want, k)
+            if take > 0:
+                self.ledger.occupied_to_reserved(od, take)
+                k -= take
+            if self.ledger.reserved_of(od) >= job.size:
+                self.collecting.remove(od)
+                if self.od_status.get(od) == "arrived":
+                    # arrived od waiting at queue front: launch now
+                    self.queue.remove(od)
+                    self._start_od(od)
+        if k > 0:
+            self.ledger.free_nodes(k)
+
+    # ------------------------------------------------------------- scheduling
+    def _queue_key(self, jid: int):
+        return (0 if self.od_front.get(jid) else 1,
+                self.jobs[jid].submit_time, jid)
+
+    def _schedule(self) -> None:
+        if self._in_schedule:
+            return
+        self._in_schedule = True
+        try:
+            changed = True
+            while changed:
+                changed = False
+                self.queue.sort(key=self._queue_key)
+                if not self.queue:
+                    break
+                head = self.queue[0]
+                if self._try_start(head):
+                    changed = True
+                    continue
+                if self._steal_holds(head) and self._try_start(head):
+                    changed = True
+                    continue
+                if (self.cfg.allow_reserved_backfill
+                        and self.jobs[head].jtype is not JobType.ONDEMAND
+                        and self._try_start_borrowed(head)):
+                    changed = True
+                    continue
+                self._backfill(head)
+                break
+        finally:
+            self._in_schedule = False
+
+    def _avail_for(self, jid: int) -> int:
+        job = self.jobs[jid]
+        avail = self.ledger.free + self.ledger.hold_of(jid)
+        if job.jtype is JobType.ONDEMAND:
+            avail += self.ledger.reserved_of(jid)
+        return avail
+
+    def _steal_holds(self, head: int) -> int:
+        """Deadlock resolution: the queue head outranks returned-lease holds
+        of jobs *behind* it.  Transfers just enough held nodes (youngest
+        holder first) into the free pool; returns nodes transferred."""
+        job = self.jobs[head]
+        need_min = job.n_min if job.jtype is JobType.MALLEABLE else job.size
+        short = need_min - self._avail_for(head)
+        if short <= 0:
+            return 0
+        moved = 0
+        for jid in reversed(self.queue[1:]):
+            if moved >= short:
+                break
+            k = min(self.ledger.hold_of(jid), short - moved)
+            if k > 0:
+                self.ledger.job_hold[jid] -= k
+                if self.ledger.job_hold[jid] == 0:
+                    del self.ledger.job_hold[jid]
+                self.ledger.free += k
+                moved += k
+        return moved if moved >= short else moved
+
+    def _try_start(self, jid: int) -> bool:
+        job = self.jobs[jid]
+        need_min = job.n_min if job.jtype is JobType.MALLEABLE else job.size
+        if self._avail_for(jid) < need_min:
+            return False
+        self.queue.remove(jid)
+        if job.jtype is JobType.ONDEMAND:
+            self._start_od(jid)
+            return True
+        size = job.size if job.jtype is not JobType.MALLEABLE else \
+            min(job.n_max, self._avail_for(jid))
+        hold = self.ledger.take_hold(jid)
+        from_hold = min(hold, size)
+        if from_hold:  # re-insert then consume precisely
+            self.ledger.add_hold(jid, from_hold)
+        if hold > from_hold:  # excess hold returns to the pool
+            self.ledger.free += hold - from_hold
+        self.ledger.allocate(size, from_free=size - from_hold,
+                             from_hold=from_hold, hold_jid=jid if from_hold else None)
+        self._begin_run(jid, size)
+        return True
+
+    def _borrowable(self, jid: int) -> int:
+        """Idle reserved nodes this waiting job may borrow (paper §III-B1).
+
+        Only reservations of *not-yet-arrived* on-demand jobs are usable.
+        Rigid borrowers must be estimated to finish before the earliest
+        owner arrival (their preemption is expensive); malleable borrowers
+        may run past it — the 2-minute-warning preemption only costs setup.
+        """
+        pool, deadline = 0, math.inf
+        for od, k in self.ledger.od_reserved.items():
+            if self.od_status.get(od) == "noticed":
+                pool += k
+                deadline = min(deadline, self.jobs[od].est_arrival or math.inf)
+        if pool == 0:
+            return 0
+        job = self.jobs[jid]
+        if job.jtype is JobType.MALLEABLE:
+            return pool
+        if self.now + self.est_remaining[jid] <= deadline:
+            return pool
+        return 0
+
+    def _try_start_borrowed(self, jid: int) -> bool:
+        """Start the queue head on idle *reserved* nodes (paper §III-B1):
+        such a job is a backfill in the paper's sense and is preempted the
+        moment the reservation's on-demand job arrives."""
+        job = self.jobs[jid]
+        idle_reserved = self._borrowable(jid)
+        plain = self.ledger.free + self.ledger.hold_of(jid)
+        need_min = job.n_min if job.jtype is JobType.MALLEABLE else job.size
+        if idle_reserved == 0 or plain + idle_reserved < need_min:
+            return False
+        size = job.size if job.jtype is not JobType.MALLEABLE else \
+            min(job.n_max, plain + idle_reserved)
+        borrow = max(0, size - plain)
+        self._start_backfilled(jid, size, borrow)
+        return True
+
+    def _shadow(self, head: int) -> Tuple[float, int]:
+        """EASY reservation for the queue head over estimated releases."""
+        job = self.jobs[head]
+        need = job.n_min if job.jtype is JobType.MALLEABLE else job.size
+        avail = self._avail_for(head)
+        if avail >= need:
+            return self.now, avail - need
+        rel = sorted((self._est_end(rs), rs.cur_size) for rs in self.running.values())
+        for t, k in rel:
+            avail += k
+            if avail >= need:
+                return t, avail - need
+        return math.inf, 0
+
+    def _backfill(self, head: int) -> None:
+        t_shadow, extra = self._shadow(head)
+        for jid in list(self.queue[1:1 + self.cfg.backfill_depth]):
+            job = self.jobs[jid]
+            if job.jtype is JobType.ONDEMAND:
+                continue  # arrived ods start only via their own path
+            need_min = job.n_min if job.jtype is JobType.MALLEABLE else job.size
+            idle_reserved = self._borrowable(jid) \
+                if self.cfg.allow_reserved_backfill else 0
+            plain = self.ledger.free + self.ledger.hold_of(jid)
+            total = plain + idle_reserved
+            if total < need_min:
+                continue
+            size = job.size if job.jtype is not JobType.MALLEABLE else \
+                min(job.n_max, total)
+            from_plain = min(size, plain)
+            borrow = size - from_plain
+            est_run = self.est_remaining[jid]
+            if job.jtype is JobType.MALLEABLE:
+                est_run = job.t_setup + (est_run - job.t_setup) * job.n_max / size
+            fits_hole = self.now + est_run <= t_shadow
+            uses_free = max(0, from_plain - self.ledger.hold_of(jid))
+            if not fits_hole and uses_free > extra:
+                continue
+            if not fits_hole:
+                extra -= uses_free
+            self._start_backfilled(jid, size, borrow)
+            idle_reserved -= borrow
+
+    def _start_backfilled(self, jid: int, size: int, borrow: int) -> None:
+        self.queue.remove(jid)
+        from_hold = min(self.ledger.hold_of(jid), size - borrow)
+        from_free = size - borrow - from_hold
+        if from_hold:
+            pass
+        self.ledger.allocate(size - borrow, from_free=from_free,
+                             from_hold=from_hold, hold_jid=jid if from_hold else None)
+        borrowed: Dict[int, int] = {}
+        left = borrow
+        for od in list(self.ledger.od_reserved):
+            if left == 0:
+                break
+            if self.od_status.get(od) != "noticed":
+                continue  # never borrow from an arrived od still collecting
+            k = min(self.ledger.reserved_of(od), left)
+            self.ledger.allocate(k, od=od, from_reserved=k)
+            borrowed[od] = borrowed.get(od, 0) + k
+            left -= k
+        assert left == 0
+        self._begin_run(jid, size)
+        self.running[jid].borrowed = borrowed
+
+    # ---------------------------------------------------------------- results
+    def finish_time(self) -> float:
+        return max((r.completion or 0.0) for r in self.records.values())

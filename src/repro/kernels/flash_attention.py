@@ -1,0 +1,120 @@
+"""Flash attention as a Pallas TPU kernel.
+
+Online-softmax tiling: grid (batch, q_heads, q_blocks, kv_blocks) with the
+kv dimension innermost-sequential ("arbitrary"), carrying the running
+(max, denom, acc) in VMEM scratch.  Block shapes are MXU-aligned
+(block_q x d_head and block_kv x d_head tiles, multiples of 128 for the
+full-size configs).  GQA is handled in the k/v index_map (h -> h*K//H), so
+kv tiles are fetched once per query-head group without materializing the
+head broadcast in HBM.
+
+Causal masking is block-exact: fully-masked kv blocks are skipped with
+pl.when (no MXU work), diagonal blocks apply the triangular mask.
+
+VMEM working set per step:
+    q tile  block_q x d          (bf16/f32)
+    k,v     block_kv x d each
+    scratch block_q x d f32 acc + 2 x block_q f32 stats
+e.g. 512x128 q + 2 x 1024x128 kv + 512x128 acc ~ 1.1 MB << 16 MB VMEM.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, causal: bool, block_q: int, block_kv: int,
+            seq_q: int, seq_kv: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qi * block_q + (seq_kv - seq_q)   # query absolute positions
+    k_start = ki * block_kv
+    # skip kv blocks strictly above the causal diagonal (no MXU work)
+    if causal:
+        run = k_start <= q_start + block_q - 1
+    else:
+        run = jnp.bool_(True)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        if causal:
+            rows = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (block_q, block_kv), 0)
+            cols = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (block_q, block_kv), 1)
+            s = jnp.where(cols <= rows, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + \
+            jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())))
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        den = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_ref[...] / den[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "scale", "block_q",
+                                             "block_kv", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, scale=None,
+                    block_q: int = 512, block_kv: int = 1024,
+                    interpret: bool = False):
+    """q: (B, Sq, H, D); k/v: (B, Skv, K, D) with H % K == 0."""
+    B, Sq, H, D = q.shape
+    _, Skv, K, _ = k.shape
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    block_q = min(block_q, Sq)
+    block_kv = min(block_kv, Skv)
+    assert Sq % block_q == 0 and Skv % block_kv == 0, (Sq, Skv)
+    nq, nk = Sq // block_q, Skv // block_kv
+    grid = (B, H, nq, nk)
+    kern = functools.partial(_kernel, scale=scale, causal=causal,
+                             block_q=block_q, block_kv=block_kv,
+                             seq_q=Sq, seq_kv=Skv)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, D), lambda b, h, i, j: (b, i, h, 0)),
+            pl.BlockSpec((1, block_kv, 1, D),
+                         lambda b, h, i, j: (b, j, h * K // H, 0)),
+            pl.BlockSpec((1, block_kv, 1, D),
+                         lambda b, h, i, j: (b, j, h * K // H, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, D),
+                               lambda b, h, i, j: (b, i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, D), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

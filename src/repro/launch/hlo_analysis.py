@@ -1,0 +1,167 @@
+"""Scan-aware HLO analysis.
+
+XLA's HloCostAnalysis counts a `while` body exactly once, so for scanned
+layer stacks both `flops` and textual collective ops are undercounted by
+the trip count.  This module parses the post-SPMD HLO text, builds the
+computation call graph (fusion `calls=`, `while` body/cond, `call`
+to_apply), extracts each while's trip count from its condition's compare
+constant, and accumulates
+
+  * dot FLOPs          2 x prod(result dims) x prod(contracted dims)
+  * convolution FLOPs  2 x prod(result dims) x prod(kernel dims)/features
+  * collective bytes   result-shape bytes (all-reduce counted 2x)
+
+weighted by the product of enclosing trip counts from ENTRY.
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Dict, List, Tuple
+
+DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+               "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8, "s16": 2,
+               "u16": 2, "f8e4m3": 1, "f8e5m2": 1, "c64": 8, "u64": 8}
+
+_COMP_HDR = re.compile(r"^(ENTRY )?%?([\w.\-]+)(?:\.clone)? \(.*\)\s*->", re.M)
+_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF = re.compile(r"^\s*(?:ROOT )?%([\w.\-]+) = \(?([a-z0-9]+\[[0-9,]*\])",
+                  re.M)
+_WHILE = re.compile(r"while\(.*?\), condition=%?([\w.\-]+), body=%?([\w.\-]+)")
+_CALLS = re.compile(r"(?:calls=|to_apply=)%?([\w.\-]+)")
+_DOT = re.compile(
+    r"%[\w.\-]+ = ([a-z0-9]+\[[0-9,]*\])[^=]*? dot\(%?([\w.\-]+),"
+    r".*?lhs_contracting_dims=\{([0-9,]*)\}")
+_CONV = re.compile(
+    r"%[\w.\-]+ = ([a-z0-9]+\[[0-9,]*\])[^=]*? convolution\(")
+_COLL = re.compile(
+    r"= \(?((?:[a-z0-9]+\[[0-9,]*\][^)=]*?)+)\)?\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+
+
+def _dims(shape_str: str) -> Tuple[str, List[int]]:
+    m = _SHAPE.search(shape_str)
+    dt, dims = m.group(1), m.group(2)
+    return dt, [int(d) for d in dims.split(",") if d]
+
+
+def _nbytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE.findall(shape_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def split_computations(hlo: str) -> Dict[str, str]:
+    """computation name -> body text (entry name stored under '__entry__')."""
+    comps: Dict[str, str] = {}
+    spans = [(m.start(), m.group(2), bool(m.group(1)))
+             for m in _COMP_HDR.finditer(hlo)]
+    for i, (start, name, is_entry) in enumerate(spans):
+        end = spans[i + 1][0] if i + 1 < len(spans) else len(hlo)
+        comps[name] = hlo[start:end]
+        if is_entry:
+            comps["__entry__"] = name
+    return comps
+
+
+def _shape_table(body: str) -> Dict[str, str]:
+    table = {}
+    for m in _DEF.finditer(body):
+        table[m.group(1)] = m.group(2)
+    # parameters in the header:  (param_0.2: f32[6,128,32], ...)
+    hdr = body.split("{", 1)[0]
+    for pm in re.finditer(r"([\w.\-]+): \(?([a-z0-9]+\[[0-9,]*\])", hdr):
+        table[pm.group(1)] = pm.group(2)
+    return table
+
+
+def _comp_stats(body: str) -> dict:
+    table = _shape_table(body)
+    flops = 0.0
+    for m in _DOT.finditer(body):
+        res, lhs_name, contract = m.group(1), m.group(2), m.group(3)
+        _, rdims = _dims(res)
+        lhs_shape = table.get(lhs_name)
+        if lhs_shape is None:
+            continue
+        _, ldims = _dims(lhs_shape)
+        cdims = [int(c) for c in contract.split(",") if c]
+        csize = math.prod(ldims[c] for c in cdims) if cdims else 1
+        flops += 2.0 * math.prod(rdims) * csize
+    conv_flops = 0.0
+    for m in _CONV.finditer(body):
+        _, rdims = _dims(m.group(1))
+        conv_flops += 2.0 * math.prod(rdims)  # lower bound (kernel ~1)
+    coll_bytes = 0.0
+    coll_ops: Dict[str, int] = {}
+    for m in _COLL.finditer(body):
+        b = _nbytes(m.group(1))
+        op = m.group(2)
+        factor = 2.0 if op == "all-reduce" else 1.0
+        coll_bytes += b * factor
+        coll_ops[op] = coll_ops.get(op, 0) + 1
+    return {"flops": flops, "conv_flops": conv_flops,
+            "coll_bytes": coll_bytes, "coll_ops": coll_ops,
+            "whiles": _WHILE.findall(body),
+            "children": set(_CALLS.findall(body))}
+
+
+def analyze(hlo: str) -> dict:
+    """Scan-aware totals for one partition of the compiled module."""
+    comps = split_computations(hlo)
+    entry = comps.pop("__entry__", None)
+    stats = {name: _comp_stats(body) for name, body in comps.items()}
+
+    trip: Dict[str, int] = {}          # body name -> trip count
+    for name, st in stats.items():
+        for cond, body in st["whiles"]:
+            cond_text = comps.get(cond, "")
+            consts = [int(c) for c in _CONST_INT.findall(cond_text)]
+            trip[body] = max(consts) if consts else 1
+
+    memo: Dict[str, Tuple[float, float, float, dict]] = {}
+
+    def total(name: str, seen=()) -> Tuple[float, float, float, dict]:
+        if name in memo:
+            return memo[name]
+        if name not in stats or name in seen:
+            return (0.0, 0.0, 0.0, {})
+        st = stats[name]
+        f, cf, cb = st["flops"], st["conv_flops"], st["coll_bytes"]
+        ops = dict(st["coll_ops"])
+        seen = seen + (name,)
+        for cond, body in st["whiles"]:
+            tf, tcf, tcb, tops = total(body, seen)
+            t = trip.get(body, 1)
+            f += tf * t
+            cf += tcf * t
+            cb += tcb * t
+            for k, v in tops.items():
+                ops[k] = ops.get(k, 0) + v * t
+        for child in st["children"]:
+            if child in (w[1] for w in st["whiles"]):
+                continue
+            tf, tcf, tcb, tops = total(child, seen)
+            f += tf
+            cf += tcf
+            cb += tcb
+            for k, v in tops.items():
+                ops[k] = ops.get(k, 0) + v
+        memo[name] = (f, cf, cb, ops)
+        return memo[name]
+
+    if entry is None:
+        return {"error": "no ENTRY computation found"}
+    f, cf, cb, ops = total(entry)
+    return {"dot_flops": f, "conv_flops": cf, "collective_bytes": cb,
+            "collective_ops": ops,
+            "while_trip_counts": sorted(trip.values(), reverse=True)[:8]}

@@ -1,0 +1,82 @@
+"""Mesh context + activation sharding constraints.
+
+XLA's sharding propagation can pick pathological layouts for scan carries
+(involuntary full rematerialization).  Pinning activations at block
+boundaries to (batch over pod x data, replicated elsewhere) keeps the
+layout stable; every constraint is a no-op when no mesh is set (CPU smoke
+tests, single device).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+_MESH: Optional[Mesh] = None
+_BATCH_AXES: Tuple[str, ...] = ("data",)
+
+
+def set_mesh(mesh: Optional[Mesh], batch_axes=("data",)) -> None:
+    global _MESH, _BATCH_AXES
+    _MESH = mesh
+    _BATCH_AXES = tuple(batch_axes)
+
+
+def get_mesh() -> Optional[Mesh]:
+    return _MESH
+
+
+def batch_axes() -> Tuple[str, ...]:
+    return _BATCH_AXES
+
+
+def _flat(axes):
+    return axes if len(axes) > 1 else axes[0]
+
+
+def constrain(x, *spec):
+    """with_sharding_constraint(x, P(*spec)) if a mesh is active.
+    Use "batch" as a placeholder for the flattened batch axes."""
+    if _MESH is None or x is None:
+        return x
+    spec = tuple(_flat(_BATCH_AXES) if s == "batch" else s for s in spec)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_MESH, P(*spec)))
+
+
+def constrain_batch(x):
+    """Shard dim 0 over batch axes; replicate the rest (any rank)."""
+    if _MESH is None or x is None:
+        return x
+    import numpy as np
+    n = int(np.prod([_MESH.shape[a] for a in _BATCH_AXES]))
+    if not x.shape or x.shape[0] % n:
+        return x
+    return constrain(x, "batch", *([None] * (x.ndim - 1)))
+
+
+def constrain_tree(tree, shardings):
+    if _MESH is None or shardings is None:
+        return tree
+    return jax.lax.with_sharding_constraint(tree, shardings)
+
+
+def constrain_heads(x, head_axis: int = 2):
+    """Pin (B, S, H, D)-like activations: batch on dp axes, heads on model
+    (TP layout only, and only when H divides the axis)."""
+    if _MESH is None or x is None or "model" in _BATCH_AXES:
+        return x
+    if "model" not in _MESH.axis_names:
+        return x
+    if x.shape[head_axis] % _MESH.shape["model"]:
+        return x
+    spec = [None] * x.ndim
+    import numpy as np
+    nb = int(np.prod([_MESH.shape[a] for a in _BATCH_AXES]))
+    if x.shape[0] % nb == 0:
+        spec[0] = _flat(_BATCH_AXES)
+    spec[head_axis] = "model"
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_MESH, P(*spec)))

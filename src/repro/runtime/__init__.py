@@ -1,0 +1,5 @@
+from .elastic import ElasticJob
+from .straggler import StragglerMonitor
+from .cluster import LiveCluster, LiveJobInfo
+
+__all__ = ["ElasticJob", "StragglerMonitor", "LiveCluster", "LiveJobInfo"]

@@ -1,0 +1,172 @@
+"""LiveCluster: the paper's mechanisms driving REAL JAX jobs.
+
+Where `repro.core.Simulator` advances a clock over a trace, LiveCluster
+applies the same decision kernels (select_preemption_victims /
+apportion_shrink) to actual ElasticJobs training on actual devices, and
+serves actual on-demand inference on the nodes it vacates.  This is the
+integration point that makes the paper's scheduler a first-class feature
+of the framework rather than a standalone simulator.
+
+Node = one jax device (the demo runs on host platform devices; on a real
+cluster a node is a chip group and the device lists come from the
+launcher).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.decision import apportion_shrink, select_preemption_victims
+from .elastic import ElasticJob
+
+
+@dataclass
+class LiveJobInfo:
+    job: ElasticJob
+    min_nodes: int
+    max_nodes: int
+    node_ids: List[int] = field(default_factory=list)
+    status: str = "waiting"       # waiting|running|preempted|done
+    steps_done: int = 0
+    target_steps: int = 100
+    preempt_count: int = 0
+    shrink_count: int = 0
+
+
+class LiveCluster:
+    def __init__(self, devices: Sequence, arrival_policy: str = "SPAA"):
+        self.devices = list(devices)
+        self.free: List[int] = list(range(len(self.devices)))
+        self.jobs: Dict[int, LiveJobInfo] = {}
+        self.arrival_policy = arrival_policy
+        self.log: List[dict] = []
+
+    # ------------------------------------------------------------- lifecycle
+    def submit(self, job: ElasticJob, *, min_nodes: int, max_nodes: int,
+               target_steps: int = 100) -> LiveJobInfo:
+        info = LiveJobInfo(job=job, min_nodes=min_nodes, max_nodes=max_nodes,
+                           target_steps=target_steps)
+        self.jobs[job.jid] = info
+        self._try_start(info)
+        return info
+
+    def _try_start(self, info: LiveJobInfo) -> bool:
+        want = min(info.max_nodes, len(self.free))
+        if want < info.min_nodes or \
+                (info.job.kind == "rigid" and want < info.max_nodes):
+            return False
+        ids = [self.free.pop() for _ in range(
+            info.max_nodes if info.job.kind == "rigid" else want)]
+        info.node_ids = ids
+        devs = [self.devices[i] for i in ids]
+        if info.job.state is None and info.job.step_idx == 0:
+            info.job.start(devs)
+        elif info.status == "preempted" and info.job.ckpt_dir:
+            info.job.resume(devs)
+        else:
+            info.job.start(devs)
+        info.status = "running"
+        self._log("start", info.job.jid, nodes=len(ids))
+        return True
+
+    def step_all(self, n: int = 1) -> None:
+        """Round-robin n train steps on every running job."""
+        for _ in range(n):
+            for info in self.jobs.values():
+                if info.status == "running":
+                    info.job.step()
+                    info.steps_done += 1
+                    if info.steps_done >= info.target_steps:
+                        self._finish(info)
+
+    def _finish(self, info: LiveJobInfo) -> None:
+        info.status = "done"
+        self.free.extend(info.node_ids)
+        info.node_ids = []
+        self._log("finish", info.job.jid)
+        self._restart_waiting()
+
+    def _restart_waiting(self) -> None:
+        for info in self.jobs.values():
+            if info.status in ("waiting", "preempted"):
+                self._try_start(info)
+
+    # ---------------------------------------------------- on-demand arrival
+    def acquire_for_ondemand(self, need: int) -> List[int]:
+        """Vacate `need` nodes using the configured mechanism (paper
+        §III-B2) and return their ids.  Raises if impossible."""
+        got: List[int] = []
+        take = min(need, len(self.free))
+        got += [self.free.pop() for _ in range(take)]
+        if len(got) == need:
+            self._log("od_acquire", -1, source="free", nodes=need)
+            return got
+        rest = need - len(got)
+        if self.arrival_policy == "SPAA":
+            run_m = [i for i in self.jobs.values()
+                     if i.status == "running" and i.job.kind == "malleable"
+                     and len(i.node_ids) > i.min_nodes]
+            sheds = apportion_shrink([len(i.node_ids) for i in run_m],
+                                     [i.min_nodes for i in run_m], rest)
+            if sheds:
+                for info, k in zip(run_m, sheds):
+                    if k == 0:
+                        continue
+                    keep = info.node_ids[:-k]
+                    got += info.node_ids[-k:]
+                    info.node_ids = keep
+                    info.shrink_count += 1
+                    cost = info.job.resize([self.devices[i] for i in keep])
+                    self._log("shrink", info.job.jid, shed=k,
+                              reshard_s=round(cost, 3))
+                return got
+        # PAA fallback: preempt in ascending overhead (steps since ckpt x n)
+        cand = [i for i in self.jobs.values() if i.status == "running"]
+        over = [((i.steps_done % i.job.ckpt_every)
+                 if i.job.kind == "rigid" else 0) * len(i.node_ids) +
+                len(i.node_ids) for i in cand]
+        victims, _ = select_preemption_victims(
+            [len(i.node_ids) for i in cand], over, rest)
+        if not victims:
+            for i in got:
+                self.free.append(i)
+            raise RuntimeError(f"cannot vacate {need} nodes")
+        for vi in victims:
+            info = cand[vi]
+            info.job.preempt(warning=info.job.kind == "malleable")
+            info.status = "preempted"
+            info.preempt_count += 1
+            got += info.node_ids
+            info.node_ids = []
+            self._log("preempt", info.job.jid)
+        surplus = len(got) - need
+        for _ in range(surplus):
+            self.free.append(got.pop())
+        return got
+
+    def release_ondemand(self, node_ids: List[int]) -> None:
+        """On-demand completion: return leased nodes (paper §III-B3) —
+        expand shrunk jobs, resume preempted ones, rest to the pool."""
+        pool = list(node_ids)
+        for info in self.jobs.values():
+            if info.status == "running" and info.shrink_count and \
+                    len(info.node_ids) < info.max_nodes and pool:
+                grow = min(info.max_nodes - len(info.node_ids), len(pool))
+                info.node_ids += [pool.pop() for _ in range(grow)]
+                cost = info.job.resize(
+                    [self.devices[i] for i in info.node_ids])
+                self._log("expand", info.job.jid, grow=grow,
+                          reshard_s=round(cost, 3))
+        self.free.extend(pool)
+        self._restart_waiting()
+
+    def _log(self, event: str, jid: int, **kw) -> None:
+        self.log.append({"t": time.time(), "event": event, "jid": jid, **kw})
+
+    def utilization(self) -> float:
+        used = sum(len(i.node_ids) for i in self.jobs.values()
+                   if i.status == "running")
+        return used / len(self.devices)

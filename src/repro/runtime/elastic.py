@@ -1,0 +1,146 @@
+"""Elastic job runtime: the execution half of the paper's job classes.
+
+An ElasticJob owns a training job's full state and implements the five
+operations the scheduler issues (paper §I: "start, preemption, shrink,
+expansion" + resume):
+
+  start(devices)        jit + (init | restore) onto a mesh over `devices`
+  step(batch?)          one train step (auto data pipeline)
+  preempt(warning)      malleable: 2-min-warning checkpoint at the exact
+                        step; rigid: fall back to the last periodic ckpt
+  shrink/expand(devs)   re-shard the *live* train state onto a different
+                        mesh (checkpoint-free elastic resize)
+  resume(devices)       start() from the persisted checkpoint
+
+Re-sharding uses jax.device_put with the new mesh's NamedShardings — the
+runtime-measured cost of the paper's "negligible" malleable resize
+assumption (recorded in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.models import init_params, set_mesh
+from repro.models.config import ModelConfig
+from repro.sharding import batch_axes, tree_shardings
+from repro.training import (AdamW, checkpoint, make_train_state,
+                            make_train_step, synthetic_batch)
+from .straggler import StragglerMonitor
+
+
+class ElasticJob:
+    def __init__(self, jid: int, cfg: ModelConfig, *, kind: str = "malleable",
+                 batch: int = 8, seq: int = 128, opt: Optional[AdamW] = None,
+                 ckpt_dir: Optional[str] = None, ckpt_every: int = 50,
+                 seed: int = 0):
+        assert kind in ("rigid", "malleable")
+        self.jid = jid
+        self.cfg = cfg
+        self.kind = kind
+        self.batch = batch
+        self.seq = seq
+        self.opt = opt or AdamW(warmup=10, total_steps=10_000)
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = ckpt_every
+        self.seed = seed
+        self.step_idx = 0
+        self.state = None
+        self.mesh: Optional[Mesh] = None
+        self.devices: Sequence = ()
+        self.monitor = StragglerMonitor()
+        self.resize_costs: List[float] = []
+        self._step_fn = None
+
+    # ------------------------------------------------------------------ mesh
+    def _build(self, devices: Sequence) -> Mesh:
+        n = len(devices)
+        mesh = Mesh(np.asarray(devices).reshape(n, 1), ("data", "model"))
+        return mesh
+
+    def _jit(self):
+        set_mesh(self.mesh, batch_axes(self.mesh))
+        shardings = None
+        step = make_train_step(self.cfg, self.opt)
+        self._step_fn = jax.jit(step, donate_argnums=(0,))
+
+    # ----------------------------------------------------------------- start
+    def start(self, devices: Sequence) -> None:
+        self.devices = list(devices)
+        self.mesh = self._build(self.devices)
+        self._jit()
+        if self.state is None:
+            with self.mesh:
+                params = init_params(jax.random.PRNGKey(self.seed), self.cfg)
+                self.state = make_train_state(params, self.opt)
+        else:
+            self._reshard()
+
+    def resume(self, devices: Sequence) -> None:
+        assert self.ckpt_dir is not None
+        self.devices = list(devices)
+        self.mesh = self._build(self.devices)
+        self._jit()
+        template = self.state
+        if template is None:
+            with self.mesh:
+                params = init_params(jax.random.PRNGKey(self.seed), self.cfg)
+                template = make_train_state(params, self.opt)
+        self.state = checkpoint.restore(self.ckpt_dir, template)
+        self.step_idx = checkpoint.latest_step(self.ckpt_dir)
+        self._reshard()
+
+    # ------------------------------------------------------------------ step
+    def step(self) -> dict:
+        t0 = time.perf_counter()
+        batch = synthetic_batch(self.cfg, self.batch, self.seq,
+                                seed=self.seed, step=self.step_idx)
+        # tracing happens on the first call after (re)jit: the sharding-
+        # constraint mesh context must be THIS job's mesh at that moment
+        set_mesh(self.mesh, batch_axes(self.mesh))
+        with self.mesh:
+            self.state, metrics = self._step_fn(self.state, batch)
+        metrics = {k: float(v) for k, v in metrics.items()}
+        self.step_idx += 1
+        self.monitor.observe(time.perf_counter() - t0)
+        if self.ckpt_dir and self.step_idx % self.ckpt_every == 0:
+            self.checkpoint()
+        return metrics
+
+    def checkpoint(self) -> None:
+        assert self.ckpt_dir is not None
+        checkpoint.save(self.ckpt_dir, self.step_idx, self.state)
+
+    # -------------------------------------------------------------- preempt
+    def preempt(self, warning: bool = True) -> None:
+        """warning=True is the 2-minute-warning path (malleable): snapshot
+        the exact current step.  Rigid jobs lose work since the last
+        periodic checkpoint (paper §III-A)."""
+        if self.ckpt_dir is not None and (warning or self.kind == "malleable"):
+            self.checkpoint()
+        self.mesh = None
+        self._step_fn = None
+        self.devices = ()
+
+    # -------------------------------------------------------- shrink/expand
+    def resize(self, devices: Sequence) -> float:
+        """Checkpoint-free elastic resize onto a new device set.  Returns
+        the wall-clock resharding cost in seconds."""
+        t0 = time.perf_counter()
+        self.devices = list(devices)
+        self.mesh = self._build(self.devices)
+        self._jit()
+        self._reshard()
+        dt = time.perf_counter() - t0
+        self.resize_costs.append(dt)
+        return dt
+
+    def _reshard(self) -> None:
+        sh = tree_shardings(self.state, self.cfg, self.mesh)
+        # batch-dim arrays in the state are only params/opt (no batch): the
+        # rules give everything a valid spec on the new mesh.
+        self.state = jax.device_put(self.state, sh)

@@ -1,0 +1,109 @@
+"""Batched serving engine for on-demand jobs.
+
+Prefill + greedy decode with a fixed-capacity KV cache and simple
+continuous batching: requests are grouped into a padded batch, prefilled
+once, then decoded step-by-step; finished sequences are masked out.  This
+is the execution payload of the paper's *on-demand* job class.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decode_step, init_cache, prefill
+from repro.models.config import ModelConfig
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (S,) int32
+    max_new_tokens: int = 32
+    submitted_at: float = field(default_factory=time.time)
+    tokens_out: List[int] = field(default_factory=list)
+    first_token_at: Optional[float] = None
+    done_at: Optional[float] = None
+
+
+class ServeEngine:
+    """Greedy batched decoding over a fixed max_seq cache."""
+
+    def __init__(self, cfg: ModelConfig, params, *, max_seq: int = 512,
+                 eos_id: Optional[int] = None, donate_cache: bool = True):
+        if cfg.family not in ("dense", "moe", "vlm"):
+            raise NotImplementedError(
+                "ServeEngine drives attention-family LMs; recurrent archs "
+                "serve via decode_step directly")
+        self.cfg = cfg
+        self.params = params
+        self.max_seq = max_seq
+        self.eos_id = eos_id
+        self._prefill = jax.jit(
+            lambda p, t: prefill(p, t, cfg))
+        self._decode = jax.jit(
+            lambda p, c, t, pos: decode_step(p, c, t, pos, cfg),
+            donate_argnums=(1,) if donate_cache else ())
+
+    def serve_batch(self, requests: List[Request]) -> List[Request]:
+        """Run a padded batch of requests to completion."""
+        B = len(requests)
+        lens = [len(r.prompt) for r in requests]
+        S = max(lens)
+        toks = np.zeros((B, S), np.int32)
+        for i, r in enumerate(requests):
+            toks[i, S - lens[i]:] = r.prompt    # left-pad to align last token
+        logits, cache = self._prefill(self.params, jnp.asarray(toks))
+        # grow cache to max_seq
+        cache = jax.tree.map(
+            lambda c: _grow(c, self.max_seq), cache)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        live = np.ones((B,), bool)
+        n_steps = max(r.max_new_tokens for r in requests)
+        now = time.time()
+        for i, r in enumerate(requests):
+            r.first_token_at = now
+            r.tokens_out.append(int(next_tok[i]))
+        for step in range(1, n_steps):
+            pos = S + step - 1
+            if pos >= self.max_seq:
+                break
+            logits, cache = self._decode(self.params, cache,
+                                         next_tok[:, None], pos)
+            next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            toks_np = np.asarray(next_tok)
+            for i, r in enumerate(requests):
+                if not live[i]:
+                    continue
+                r.tokens_out.append(int(toks_np[i]))
+                if len(r.tokens_out) >= r.max_new_tokens or \
+                        (self.eos_id is not None and toks_np[i] == self.eos_id):
+                    live[i] = False
+                    r.done_at = time.time()
+            if not live.any():
+                break
+        now = time.time()
+        for r in requests:
+            r.done_at = r.done_at or now
+        return requests
+
+
+def _grow(c, max_seq: int):
+    """Pad a prefill-sized cache array out to max_seq on its seq axis."""
+    # attention caches have the seq axis at -3 (L,B,S,K,D) or -2 (L,B,S,C)
+    for ax in (-3, -2):
+        if c.ndim >= abs(ax) and c.shape[ax] not in (0,) and \
+                c.ndim >= 3 and c.shape[ax] < max_seq and _looks_seq(c, ax):
+            pad = [(0, 0)] * c.ndim
+            pad[ax] = (0, max_seq - c.shape[ax])
+            return jnp.pad(c, pad)
+    return c
+
+
+def _looks_seq(c, ax: int) -> bool:
+    # heuristic: the seq axis is the largest axis of an attention cache
+    return c.shape[ax] == max(c.shape)

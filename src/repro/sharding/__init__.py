@@ -1,0 +1,5 @@
+from .rules import (batch_axes, batch_sharding, cache_shardings, dp_axes,
+                    param_spec, tree_shardings)
+
+__all__ = ["batch_axes", "batch_sharding", "cache_shardings", "dp_axes",
+           "param_spec", "tree_shardings"]

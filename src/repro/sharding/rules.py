@@ -1,0 +1,200 @@
+"""PartitionSpec rules: params, optimizer state, batches, caches.
+
+Layout (DESIGN.md §5):
+  * `model` axis: TP for attention heads / FFN hidden / vocab; EP for MoE
+    experts; sequence dim of KV caches when heads cannot shard.
+  * `data` (x `pod`) axes: batch; with cfg.fsdp also the largest weight dim
+    (ZeRO-3-like; XLA all-gathers per scan step).
+
+Rules are name-based over flattened tree paths and divisibility-checked:
+a dim is only sharded if its size divides the axis size (so reduced smoke
+configs fall back to replication automatically).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig, ShapeSpec
+
+
+def _axsize(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _fits(dim: int, mesh: Mesh, axes) -> bool:
+    n = _axsize(mesh, axes)
+    return n > 1 and dim % n == 0
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def dp_axes(cfg: ModelConfig, mesh: Mesh) -> Tuple[str, ...]:
+    """Axes the batch (and fsdp weights) shard over.  layout="fsdp" folds
+    the model axis into data parallelism (pure ZeRO-3, no TP)."""
+    ax = batch_axes(mesh)
+    if cfg.layout == "fsdp" and "model" in mesh.axis_names:
+        ax = ax + ("model",)
+    return ax
+
+
+# ------------------------------------------------------------------ params
+_RULES = [
+    # pattern over the joined path           -> dims spec builder
+    (r"embed/(tok|unembed)$", lambda d: ("model", "fsdp")),
+    (r"patch_proj$", lambda d: ("fsdp", None)),
+    (r"(attn|xattn)/wq$", lambda d: ("fsdp", "model", None)),
+    (r"(attn|xattn)/w(k|v)$", lambda d: ("fsdp", "model", None)),
+    (r"(attn|xattn)/wo$", lambda d: ("model", None, "fsdp")),
+    (r"attn/wq_a$", lambda d: ("fsdp", None)),
+    (r"attn/wq_b$", lambda d: (None, "model", None)),
+    (r"attn/wkv_a$", lambda d: ("fsdp", None)),
+    (r"attn/wk_rope$", lambda d: ("fsdp", None)),
+    (r"attn/wkv_b$", lambda d: (None, "model", None)),
+    (r"ffn/w_(gate|up)$", lambda d: ("fsdp", "model")),
+    (r"ffn/w_down$", lambda d: ("model", "fsdp")),
+    (r"moe/router$", lambda d: (None, None)),
+    (r"moe/w[13]$", lambda d: ("model", "fsdp", None)),
+    (r"moe/w2$", lambda d: ("model", None, "fsdp")),
+    (r"moe/shared/w_(gate|up)$", lambda d: ("fsdp", "model")),
+    (r"moe/shared/w_down$", lambda d: ("model", "fsdp")),
+    # mamba: Megatron-style channel/head TP over `model`
+    (r"w_(x|z)$", lambda d: (None, "model")),
+    (r"w_dt$", lambda d: (None, "model")),
+    (r"w_bc$", lambda d: (None, None)),
+    (r"conv_x_[wb]$", lambda d: (None, "model")[:d]),
+    (r"(a_log|d_skip|dt_bias)$", lambda d: ("model",)),
+    (r"mamba.*norm$|layers/norm$", lambda d: ("model",)),
+    (r"w_out$", lambda d: ("model", None)),
+    (r"w_(up|down|q|k|v|if|x|ff1|ff2)$", lambda d: ("fsdp", None)[:d] + (None,) * max(0, d - 2)),
+]
+
+
+def param_spec(path: str, shape: Tuple[int, ...], cfg: ModelConfig,
+               mesh: Mesh, stacked) -> P:
+    n_stack = int(stacked)
+    dims: Optional[Tuple] = None
+    for pat, builder in _RULES:
+        if re.search(pat, path):
+            dims = builder(len(shape) - n_stack)
+            break
+    if dims is None:
+        dims = (None,) * (len(shape) - n_stack)
+    body = shape[n_stack:]
+    spec = []
+    pure_fsdp = cfg.layout == "fsdp"
+    fsdp_ax = dp_axes(cfg, mesh) if (cfg.fsdp or pure_fsdp) else None
+    for size, want in zip(body, tuple(dims) + (None,) * (len(body) - len(dims))):
+        ax = None
+        if pure_fsdp and want == "model":
+            want = "fsdp" if "fsdp" not in dims else None
+        if want == "model" and _fits(size, mesh, "model"):
+            ax = "model"
+        elif want == "fsdp" and fsdp_ax and _fits(size, mesh, fsdp_ax):
+            ax = fsdp_ax if len(fsdp_ax) > 1 else fsdp_ax[0]
+        spec.append(ax)
+    spec = [None] * n_stack + spec
+    return P(*spec)
+
+
+def _is_layer_path(path: str) -> bool:
+    return bool(re.search(r"(^|/)((pre_)?layers|enc_layers|slstm|mlstm)(/|$)", path))
+
+
+def _key_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "name"):
+        return str(p.name)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def path_str(path) -> str:
+    return "/".join(_key_str(p) for p in path)
+
+
+def tree_shardings(tree, cfg: ModelConfig, mesh: Mesh):
+    """NamedSharding pytree matching `tree` (params / full train state)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        pstr = path_str(path)
+        stacked = _is_layer_path(pstr)
+        if re.search(r"(^|/)mlstm(/|$)", pstr):
+            stacked = 2          # (n_groups, n_m, ...) double stack
+        spec = param_spec(pstr, leaf.shape, cfg, mesh, stacked)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------- batches
+def batch_sharding(tree, mesh: Mesh, axes: Optional[Tuple[str, ...]] = None):
+    """Shard dim 0 (global batch) over the dp axes; replicate the rest."""
+    ba = axes or batch_axes(mesh)
+    ax = ba if len(ba) > 1 else ba[0]
+
+    def spec(leaf):
+        if leaf is None:
+            return None
+        if leaf.shape and _fits(leaf.shape[0], mesh, ba):
+            return NamedSharding(mesh, P(ax, *([None] * (len(leaf.shape) - 1))))
+        return NamedSharding(mesh, P())
+    return jax.tree_util.tree_map(spec, tree)
+
+
+# ------------------------------------------------------------------ caches
+def cache_shardings(tree, cfg: ModelConfig, mesh: Mesh, shape: ShapeSpec):
+    """KV caches: batch over pod x data; heads over model when divisible,
+    else the sequence dim goes to model (ring-ish decode).  Recurrent
+    states shard their head dim over model when possible."""
+    ba = batch_axes(mesh)
+    bax = ba if len(ba) > 1 else ba[0]
+
+    def spec(leaf):
+        shp = leaf.shape
+        dims = [None] * len(shp)
+        if len(shp) >= 4 and shp[-3] == shape.seq_len or \
+                (len(shp) >= 3 and shp[-2] == shape.seq_len):
+            # attention cache: (L?, B, S, K, Dh) or (L?, B, S, C)
+            off = 1 if shp[0] not in (shape.global_batch,) else 0
+            b_i = off
+            s_i = off + 1
+            if _fits(shp[b_i], mesh, ba):
+                dims[b_i] = bax
+            k_i = s_i + 1 if len(shp) > s_i + 1 else None
+            if k_i is not None and len(shp) >= s_i + 3 and \
+                    _fits(shp[k_i], mesh, "model"):
+                dims[k_i] = "model"
+            elif _fits(shp[s_i], mesh, "model"):
+                dims[s_i] = "model"
+            if dims[b_i] is None and shp[b_i] == 1 and _fits(shp[s_i], mesh, ba) \
+                    and dims[s_i] == "model":
+                dims[s_i] = None
+                if _fits(shp[s_i], mesh, ba + ("model",)):
+                    dims[s_i] = ba + ("model",)
+        else:
+            # recurrent state: shard batch, then heads over model
+            for i, d in enumerate(shp):
+                if dims.count(bax) == 0 and _fits(d, mesh, ba) and \
+                        d == shape.global_batch:
+                    dims[i] = bax
+                    break
+            for i, d in enumerate(shp):
+                if dims[i] is None and _fits(d, mesh, "model"):
+                    dims[i] = "model"
+                    break
+        return NamedSharding(mesh, P(*dims))
+    return jax.tree_util.tree_map(spec, tree)

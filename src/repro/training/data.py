@@ -1,0 +1,74 @@
+"""Synthetic token pipeline: deterministic, shardable, infinite.
+
+Produces TrainBatch streams per (arch config x shape); the generator is
+seeded per (job id, step) so elastic restarts resume the exact stream —
+a requirement for the scheduler's checkpoint/restart semantics.
+"""
+from __future__ import annotations
+
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import TrainBatch
+from repro.models.config import ModelConfig, ShapeSpec
+
+
+def synthetic_batch(cfg: ModelConfig, batch: int, seq: int, *,
+                    seed: int = 0, step: int = 0,
+                    np_rng: bool = True) -> TrainBatch:
+    """One deterministic batch.  Markov-ish token stream (not uniform noise,
+    so losses move during the examples' short trainings)."""
+    rng = np.random.default_rng((seed * 1_000_003 + step) % (2 ** 63))
+    base = rng.integers(0, cfg.vocab, size=(batch, 1), dtype=np.int64)
+    drift = rng.integers(-32, 33, size=(batch, seq + 1), dtype=np.int64)
+    toks = np.abs(base + np.cumsum(drift, axis=1)) % cfg.vocab
+    tokens = jnp.asarray(toks[:, :-1], jnp.int32)
+    labels = jnp.asarray(toks[:, 1:], jnp.int32)
+    extra = None
+    if cfg.family == "vlm":
+        e = rng.standard_normal((batch, cfg.n_patches, cfg.d_model)) * 0.02
+        extra = jnp.asarray(e, jnp.float32)
+    elif cfg.family == "audio":
+        e = rng.standard_normal((batch, cfg.enc_len, cfg.d_model)) * 0.02
+        extra = jnp.asarray(e, jnp.float32)
+    return TrainBatch(tokens=tokens, labels=labels, extra=extra)
+
+
+def stream(cfg: ModelConfig, batch: int, seq: int, *, seed: int = 0,
+           start_step: int = 0) -> Iterator[TrainBatch]:
+    step = start_step
+    while True:
+        yield synthetic_batch(cfg, batch, seq, seed=seed, step=step)
+        step += 1
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec):
+    """ShapeDtypeStruct stand-ins for the dry-run (no allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    f32 = jnp.float32
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        extra = None
+        s_text = S
+        if cfg.family == "vlm":
+            s_text = S - cfg.n_patches
+            extra = sds((B, cfg.n_patches, cfg.d_model), f32)
+        elif cfg.family == "audio":
+            extra = sds((B, cfg.enc_len, cfg.d_model), f32)
+        return TrainBatch(tokens=sds((B, s_text), i32),
+                          labels=sds((B, s_text), i32), extra=extra)
+    if shape.kind == "prefill":
+        extra = None
+        s_text = S
+        if cfg.family == "vlm":
+            s_text = S - cfg.n_patches
+            extra = sds((B, cfg.n_patches, cfg.d_model), f32)
+        elif cfg.family == "audio":
+            extra = sds((B, cfg.enc_len, cfg.d_model), f32)
+        return {"tokens": sds((B, s_text), i32), "extra": extra}
+    # decode: one new token against a seq_len cache
+    return {"tokens": sds((B, 1), i32)}

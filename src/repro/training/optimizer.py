@@ -1,0 +1,82 @@
+"""AdamW + schedules, pure-JAX pytree implementation (no optax).
+
+Optimizer state dtype is fp32 regardless of param dtype (mixed precision);
+update() is shape-polymorphic over the param pytree so the same code serves
+every architecture and any sharding.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+class AdamW(NamedTuple):
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    clip_norm: float = 1.0
+
+    # -- schedule -------------------------------------------------------------
+    def lr_at(self, step) -> jax.Array:
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(self.warmup, 1), 1.0)
+        t = jnp.clip((step - self.warmup)
+                     / jnp.maximum(self.total_steps - self.warmup, 1), 0, 1)
+        cos = self.min_lr_frac + (1 - self.min_lr_frac) * 0.5 * \
+            (1 + jnp.cos(jnp.pi * t))
+        return self.lr * warm * cos
+
+    # -- state ---------------------------------------------------------------
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          m=jax.tree.map(zeros, params),
+                          v=jax.tree.map(zeros, params))
+
+    # -- update ----------------------------------------------------------------
+    def update(self, grads, state: AdamWState, params
+               ) -> Tuple[Any, AdamWState, jax.Array]:
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+        step = state.step + 1
+        lr = self.lr_at(step)
+        b1, b2 = self.b1, self.b2
+        c1 = 1 - b1 ** step.astype(jnp.float32)
+        c2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32) * scale
+            m2 = b1 * m + (1 - b1) * g
+            v2 = b2 * v + (1 - b2) * g * g
+            u = (m2 / c1) / (jnp.sqrt(v2 / c2) + self.eps)
+            u = u + self.weight_decay * p.astype(jnp.float32)
+            p2 = p.astype(jnp.float32) - lr * u
+            return p2.astype(p.dtype), m2, v2
+
+        out = jax.tree.map(upd, grads, state.m, state.v, params)
+        new_p = jax.tree.map(lambda t: t[0], out,
+                             is_leaf=lambda t: isinstance(t, tuple) and len(t) == 3)
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda t: isinstance(t, tuple) and len(t) == 3)
+        new_v = jax.tree.map(lambda t: t[2], out,
+                             is_leaf=lambda t: isinstance(t, tuple) and len(t) == 3)
+        return new_p, AdamWState(step=step, m=new_m, v=new_v), gnorm
+
+
+def global_norm(tree) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+             for x in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)

@@ -1,0 +1,60 @@
+"""Unit tests for the scan-aware HLO analyzer (pure text parsing)."""
+from repro.launch.hlo_analysis import analyze, split_computations
+
+HLO = """\
+HloModule jit_step, entry_computation_layout={()->f32[]}
+
+%body.1 (param: (s32[], f32[64,64])) -> (s32[], f32[64,64]) {
+  %p = (s32[], f32[64,64]) parameter(0)
+  %w = f32[64,128]{1,0} get-tuple-element(%p), index=1
+  %x = f32[128,64]{1,0} constant({...})
+  %dot.1 = f32[64,64]{1,0} dot(%w, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[64,64]{1,0} all-reduce(%dot.1), replica_groups={}, to_apply=%sum
+  ROOT %t = (s32[], f32[64,64]) tuple(%i, %ar)
+}
+
+%cond.2 (param.1: (s32[], f32[64,64])) -> pred[] {
+  %c = s32[] constant(12)
+  ROOT %lt = pred[] compare(%i2, %c), direction=LT
+}
+
+%sum (a: f32[], b: f32[]) -> f32[] {
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main.3 (arg: f32[64,64]) -> f32[] {
+  %w0 = f32[64,32]{1,0} parameter(0)
+  %k = f32[32,64]{1,0} constant({...})
+  %dot.9 = f32[64,64]{1,0} dot(%w0, %k), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %wl = (s32[], f32[64,64]) while(%init), condition=%cond.2, body=%body.1
+  %ag = f32[64,256]{1,0} all-gather(%dot.9), dimensions={1}
+  ROOT %r = f32[] reduce(%ag, %z), to_apply=%sum
+}
+"""
+
+
+def test_split_computations_finds_entry():
+    comps = split_computations(HLO)
+    assert comps["__entry__"] == "main.3"
+    assert "body.1" in comps and "cond.2" in comps
+
+
+def test_trip_count_multiplication():
+    res = analyze(HLO)
+    # entry dot: 2*64*64*32 = 262144; body dot 2*64*64*128 = 1048576 x 12
+    assert res["dot_flops"] == 262144 + 12 * 1048576
+    assert 12 in res["while_trip_counts"]
+
+
+def test_collective_accounting():
+    res = analyze(HLO)
+    # all-reduce in body: 64*64*4 bytes * 2 (ring) * 12 trips
+    # all-gather in entry: 64*256*4 bytes
+    expected = 64 * 64 * 4 * 2 * 12 + 64 * 256 * 4
+    assert res["collective_bytes"] == expected
+    assert res["collective_ops"]["all-reduce"] == 12
+    assert res["collective_ops"]["all-gather"] == 1
+
+
+def test_no_entry_graceful():
+    assert "error" in analyze("nothing here")

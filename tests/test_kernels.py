@@ -1,0 +1,146 @@
+"""Kernel validation: Pallas (interpret=True) and chunked-jnp ops vs the
+pure-jnp oracles in kernels/ref.py, swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ssd_scan import ssd_scan
+
+rng = np.random.default_rng(42)
+
+
+def rnd(*shape, dt=jnp.float32, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape) * scale, dt)
+
+
+def tol(dt):
+    return 2e-2 if dt == jnp.bfloat16 else 2e-5
+
+
+# ----------------------------------------------------------- flash attention
+@pytest.mark.parametrize("B,S,H,K,D", [
+    (1, 128, 4, 4, 32),     # MHA
+    (2, 256, 8, 2, 64),     # GQA 4:1
+    (1, 256, 4, 1, 64),     # MQA
+    (1, 512, 2, 2, 128),    # MXU-aligned head dim
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(B, S, H, K, D, dtype, causal):
+    q, k, v = rnd(B, S, H, D, dt=dtype), rnd(B, S, K, D, dt=dtype), \
+        rnd(B, S, K, D, dt=dtype)
+    o = flash_attention(q, k, v, causal=causal, block_q=64, block_kv=128,
+                        interpret=True)
+    o2 = ref.naive_attention(q, k, v, causal=causal)
+    err = jnp.abs(o.astype(jnp.float32) - o2.astype(jnp.float32)).max()
+    assert float(err) < tol(dtype) * 10, float(err)
+    assert o.dtype == q.dtype
+
+
+def test_flash_attention_uneven_blocks():
+    q, k, v = rnd(1, 192, 2, 32), rnd(1, 192, 1, 32), rnd(1, 192, 1, 32)
+    o = flash_attention(q, k, v, causal=True, block_q=64, block_kv=64,
+                        interpret=True)
+    o2 = ref.naive_attention(q, k, v, causal=True)
+    assert float(jnp.abs(o - o2).max()) < 1e-4
+
+
+# ------------------------------------------------- chunked-jnp attention path
+@pytest.mark.parametrize("S,block_q", [(512, 128), (1024, 128), (2048, 256)])
+def test_binary_causal_attention(S, block_q):
+    q, k, v = rnd(2, S, 4, 32), rnd(2, S, 2, 32), rnd(2, S, 2, 32)
+    o = ops.attention(q, k, v, causal=True, block_q=block_q, block_kv=256)
+    o2 = ref.naive_attention(q, k, v, causal=True)
+    assert float(jnp.abs(o - o2).max()) < 1e-4
+
+
+@pytest.mark.parametrize("valid", [1, 37, 100])
+def test_decode_attention_valid_len(valid):
+    q = rnd(2, 1, 8, 32)
+    k, v = rnd(2, 128, 4, 32), rnd(2, 128, 4, 32)
+    o = ops.attention(q, k, v, causal=False, kv_valid_len=jnp.asarray(valid))
+    o2 = ref.naive_attention(q, k, v, kv_valid_len=jnp.asarray(valid))
+    assert float(jnp.abs(o - o2).max()) < 1e-5
+
+
+def test_cross_attention_matches():
+    q = rnd(2, 64, 4, 32)
+    k, v = rnd(2, 96, 4, 32), rnd(2, 96, 4, 32)
+    o = ops.attention(q, k, v, causal=False, block_kv=32)
+    o2 = ref.naive_attention(q, k, v, causal=False)
+    assert float(jnp.abs(o - o2).max()) < 1e-5
+
+
+# -------------------------------------------------------------------- SSD
+@pytest.mark.parametrize("s,chunk", [(128, 32), (256, 64), (512, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_kernel_sweep(s, chunk, dtype):
+    b, h, p, n = 2, 2, 16, 8
+    x = rnd(b, s, h, p, dt=dtype)
+    dt = jnp.abs(rnd(b, s, h, scale=0.1)).astype(jnp.float32)
+    A = -jnp.abs(rnd(h))
+    Bm, Cm = rnd(b, s, n, dt=dtype), rnd(b, s, n, dt=dtype)
+    Dp = rnd(h)
+    y = ssd_scan(x, dt, A, Bm, Cm, Dp, chunk=chunk, interpret=True)
+    y2 = ref.naive_ssd(x, dt, A, Bm, Cm, Dp)
+    scale = float(jnp.abs(y2.astype(jnp.float32)).max()) + 1e-6
+    err = float(jnp.abs(y.astype(jnp.float32) - y2.astype(jnp.float32)).max())
+    assert err / scale < tol(dtype), (err, scale)
+
+
+def test_ssd_jnp_matches_kernel_semantics():
+    b, s, h, p, n = 1, 256, 2, 8, 4
+    x = rnd(b, s, h, p)
+    dt = jnp.abs(rnd(b, s, h, scale=0.1))
+    A = -jnp.abs(rnd(h))
+    Bm, Cm, Dp = rnd(b, s, n), rnd(b, s, n), rnd(h)
+    y1 = ops.ssd_scan(x, dt, A, Bm, Cm, Dp, chunk=64)
+    y2 = ssd_scan(x, dt, A, Bm, Cm, Dp, chunk=64, interpret=True)
+    assert float(jnp.abs(y1 - y2).max()) < 1e-4
+
+
+def test_ssd_decode_step_consistent():
+    b, s, h, p, n = 1, 16, 2, 8, 4
+    x = rnd(b, s, h, p)
+    dt = jnp.abs(rnd(b, s, h, scale=0.1))
+    A = -jnp.abs(rnd(h))
+    Bm, Cm, Dp = rnd(b, s, n), rnd(b, s, n), rnd(h)
+    y_ref = ref.naive_ssd(x, dt, A, Bm, Cm, Dp)
+    st = jnp.zeros((b, h, p, n))
+    for t in range(s):
+        st, yt = ops.ssd_step(st, x[:, t], dt[:, t], A, Bm[:, t], Cm[:, t], Dp)
+        assert float(jnp.abs(yt - y_ref[:, t]).max()) < 1e-4
+
+
+# -------------------------------------------------------------------- mLSTM
+@pytest.mark.parametrize("s,chunk", [(128, 32), (256, 64)])
+def test_mlstm_chunked(s, chunk):
+    b, h, d = 2, 2, 16
+    q, k, v = rnd(b, s, h, d), rnd(b, s, h, d, scale=0.5), rnd(b, s, h, d)
+    ig, fg = rnd(b, s, h), rnd(b, s, h) + 2.0
+    y = ops.mlstm_scan(q, k, v, ig, fg, chunk=chunk)
+    y2 = ref.naive_mlstm(q, k, v, ig, fg)
+    scale = float(jnp.abs(y2).max()) + 1e-6
+    assert float(jnp.abs(y - y2).max()) / scale < 1e-4
+
+
+# ------------------------------------------------------------- flash decode
+@pytest.mark.parametrize("B,S,H,K,D,vl", [
+    (2, 256, 8, 2, 64, 100),   # GQA, partial cache
+    (1, 512, 4, 4, 32, 512),   # MHA, full cache
+    (2, 128, 4, 1, 32, 1),     # MQA, single valid token
+    (1, 256, 8, 8, 128, 37),   # MXU-aligned head dim
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_decode_sweep(B, S, H, K, D, vl, dtype):
+    from repro.kernels.flash_decode import flash_decode
+    q = rnd(B, 1, H, D, dt=dtype)
+    k, v = rnd(B, S, K, D, dt=dtype), rnd(B, S, K, D, dt=dtype)
+    o = flash_decode(q, k, v, jnp.asarray(vl), block_kv=64, interpret=True)
+    o2 = ref.naive_attention(q, k, v, kv_valid_len=jnp.asarray(vl))
+    err = jnp.abs(o.astype(jnp.float32) - o2.astype(jnp.float32)).max()
+    assert float(err) < tol(dtype) * 10
+    assert o.dtype == q.dtype

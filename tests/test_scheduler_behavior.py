@@ -1,0 +1,213 @@
+"""Behavioral micro-scenarios for the six mechanisms (paper §III-B)."""
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (MECHANISMS, JobSpec, JobType, NoticeKind, SimConfig,
+                        Simulator, WorkloadConfig, collect, generate)
+
+N = 100  # cluster size for micro-scenarios
+
+
+def rigid(jid, t, size, rt, est=None, setup=0.0, **kw):
+    return JobSpec(jid, JobType.RIGID, "p", t, size, est or rt * 2, rt,
+                   t_setup=setup, **kw)
+
+
+def mall(jid, t, size, rt, est=None, setup=0.0, n_min=0):
+    return JobSpec(jid, JobType.MALLEABLE, "p", t, size, est or rt * 2, rt,
+                   t_setup=setup, n_min=n_min)
+
+
+def od(jid, t, size, rt, kind=NoticeKind.NONE, notice=None, est_arr=None):
+    return JobSpec(jid, JobType.ONDEMAND, "p", t, size, rt * 2, rt,
+                   notice_kind=kind, notice_time=notice, est_arrival=est_arr)
+
+
+def run(jobs, mech="N&PAA", n=N, **kw):
+    sim = Simulator(SimConfig(n_nodes=n, mechanism=mech, **kw), jobs)
+    sim.run()
+    return sim
+
+
+def test_od_instant_on_free_nodes():
+    sim = run([od(0, 10.0, 50, 100.0)])
+    r = sim.records[0]
+    assert r.instant and r.first_start == 10.0 and r.completion == 110.0
+
+
+def test_paa_preempts_cheapest_running_job():
+    # two rigid jobs; the smaller/cheaper one (no progress to lose w/o ckpt,
+    # equal setup rate) is preempted when the od job needs 30 nodes.
+    jobs = [rigid(0, 0.0, 60, 1000.0, setup=10.0),
+            rigid(1, 0.0, 40, 1000.0, setup=5.0),
+            od(2, 100.0, 30, 50.0)]
+    sim = run(jobs, "N&PAA")
+    # free = 0 at t=100; od needs 30: preempt j1 (waste 40*(5+95) < 60*(10+90))
+    assert sim.records[2].instant
+    assert sim.records[1].n_preempted == 1
+    assert sim.records[0].n_preempted == 0
+    # preempted job resumes and completes; everything drains
+    assert all(r.completion is not None for r in sim.records.values())
+
+
+def test_spaa_shrinks_instead_of_preempting():
+    jobs = [mall(0, 0.0, 80, 1000.0, n_min=20),
+            od(1, 100.0, 50, 60.0)]
+    sim = run(jobs, "N&SPAA")
+    assert sim.records[1].instant
+    assert sim.records[0].n_preempted == 0
+    assert sim.records[0].n_shrunk == 1
+    # malleable expands back after od completes and still finishes
+    assert sim.records[0].completion is not None
+
+
+def test_spaa_falls_back_to_paa_when_slack_insufficient():
+    jobs = [mall(0, 0.0, 30, 500.0, n_min=25),     # slack 5 only
+            rigid(1, 0.0, 70, 500.0, setup=1.0),
+            od(2, 50.0, 60, 60.0)]
+    sim = run(jobs, "N&SPAA")
+    assert sim.records[2].instant
+    assert sim.records[1].n_preempted + sim.records[0].n_preempted >= 1
+
+
+def test_paa_insufficient_supply_queues_od_at_front():
+    # a running od occupies most of the system; ods are not preemptable
+    jobs = [od(0, 0.0, 90, 500.0),
+            od(1, 10.0, 50, 100.0)]
+    sim = run(jobs, "N&PAA")
+    assert sim.records[0].instant
+    assert not sim.records[1].instant
+    # od1 starts right when od0 completes
+    assert sim.records[1].first_start == pytest.approx(500.0)
+
+
+def test_cua_collects_released_nodes_before_arrival():
+    # j0 releases 60 nodes at t=100, within [notice=50, arrival=200]
+    jobs = [rigid(0, 0.0, 60, 100.0),
+            rigid(1, 0.0, 40, 1000.0),
+            od(2, 200.0, 60, 50.0, NoticeKind.ACCURATE, notice=50.0,
+               est_arr=200.0)]
+    sim = run(jobs, "CUA&PAA")
+    assert sim.records[2].instant
+    assert sim.records[1].n_preempted == 0  # reservation avoided preemption
+
+
+def test_reservation_released_after_timeout():
+    # od notices at 50, est arrival 100, but actually arrives at 5000
+    # (far beyond the 600 s threshold): reserved nodes must return so the
+    # queued rigid job can start before the od arrives.
+    jobs = [rigid(0, 0.0, 60, 100.0),
+            od(1, 5000.0, 60, 50.0, NoticeKind.LATE, notice=50.0,
+               est_arr=100.0),
+            rigid(2, 120.0, 80, 100.0)]
+    sim = run(jobs, "CUA&PAA")
+    r2 = sim.records[2]
+    assert r2.first_start is not None and r2.first_start < 1000.0
+    assert sim.records[1].completion is not None
+
+
+def test_cup_preempts_rigid_after_checkpoint():
+    # one big rigid job with checkpoints; CUP should vacate it right after a
+    # checkpoint completes, before the od's estimated arrival.
+    jobs = [rigid(0, 0.0, 90, 5000.0, setup=10.0,
+                  ckpt_overhead=50.0, ckpt_interval=500.0),
+            od(1, 2000.0, 80, 100.0, NoticeKind.ACCURATE, notice=1000.0,
+               est_arr=2000.0)]
+    sim = run(jobs, "CUP&PAA")
+    assert sim.records[1].instant
+    assert sim.records[0].n_preempted == 1
+    assert sim.records[0].completion is not None
+
+
+def test_lease_returned_to_preempted_lender():
+    # od preempts j0 entirely; when od finishes, j0 reclaims nodes + resumes.
+    jobs = [rigid(0, 0.0, 100, 1000.0, setup=10.0),
+            od(1, 100.0, 100, 50.0)]
+    sim = run(jobs, "N&PAA")
+    assert sim.records[1].instant
+    r0 = sim.records[0]
+    assert r0.n_preempted == 1
+    # resumes immediately at od completion (150) and reruns from scratch
+    assert r0.completion == pytest.approx(150.0 + 10.0 + 1000.0 - 10.0, abs=2.0)
+
+
+def test_killed_at_estimate():
+    j = JobSpec(0, JobType.RIGID, "p", 0.0, 10, t_estimate=100.0,
+                t_actual=100.0, t_setup=0.0)
+    j.t_actual = 100.0
+    sim = run([j])
+    assert sim.records[0].completion == pytest.approx(100.0)
+    assert not sim.records[0].killed  # exactly finished
+
+
+def test_easy_backfill_small_job_jumps_queue():
+    # head job needs 100 nodes (blocked until t=1000); a 20-node short job
+    # submitted later must backfill into the hole.
+    jobs = [rigid(0, 0.0, 90, 1000.0),
+            rigid(1, 10.0, 100, 500.0),        # blocked head
+            rigid(2, 20.0, 10, 100.0, est=100.0)]  # fits the hole: est end 120 < 1000
+    sim = run(jobs, "BASE")
+    assert sim.records[2].first_start == pytest.approx(20.0)
+    assert sim.records[1].first_start == pytest.approx(1000.0)
+
+
+def test_backfill_on_reserved_nodes_preempted_at_arrival():
+    # CUA reserves 50 nodes at notice; a malleable job backfills onto them
+    # (cheap preemption) and is preempted the moment the od arrives.
+    jobs = [rigid(0, 0.0, 50, 2000.0),
+            od(1, 1000.0, 50, 100.0, NoticeKind.ACCURATE, notice=100.0,
+               est_arr=1000.0),
+            mall(2, 150.0, 50, 5000.0, est=6000.0, n_min=40)]
+    sim = run(jobs, "CUA&PAA")
+    assert sim.records[1].instant
+    assert sim.records[2].n_preempted == 1
+    assert sim.records[2].first_start == pytest.approx(150.0)
+
+
+def test_rigid_wont_borrow_reserved_past_est_arrival():
+    # same shape but a rigid borrower whose estimate runs past the od's
+    # estimated arrival: it must NOT start on the reserved nodes.
+    jobs = [rigid(0, 0.0, 50, 2000.0),
+            od(1, 1000.0, 50, 100.0, NoticeKind.ACCURATE, notice=100.0,
+               est_arr=1000.0),
+            rigid(2, 150.0, 50, 5000.0, est=6000.0)]
+    sim = run(jobs, "CUA&PAA")
+    assert sim.records[1].instant
+    assert sim.records[2].n_preempted == 0
+    assert sim.records[2].first_start > 1000.0
+
+
+# ------------------------------------------------------------ property: drain
+@given(seed=st.integers(0, 10_000), mech=st.sampled_from(("BASE",) + MECHANISMS))
+@settings(max_examples=25, deadline=None)
+def test_random_workload_drains_and_conserves_nodes(seed, mech):
+    """Every random workload completes under every mechanism; the node
+    ledger invariant (checked at every event) never trips; metrics finite."""
+    cfg = WorkloadConfig(n_jobs=60, n_nodes=512, n_projects=12,
+                         horizon_days=4.0, seed=seed)
+    jobs = generate(cfg)
+    sim = Simulator(SimConfig(n_nodes=cfg.n_nodes, mechanism=mech), jobs)
+    sim.run()
+    m = collect(sim)
+    assert m.n_completed == m.n_jobs
+    assert 0.0 <= m.system_utilization <= 1.0
+    for r in sim.records.values():
+        assert r.completion is not None
+        assert r.first_start is not None
+        assert r.first_start >= r.job.submit_time - 1e-9
+        assert r.completion >= r.first_start
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_od_jobs_never_preempted(seed):
+    cfg = WorkloadConfig(n_jobs=80, n_nodes=512, n_projects=12,
+                         horizon_days=4.0, seed=seed, frac_od_projects=0.3,
+                         frac_rigid_projects=0.4)
+    jobs = generate(cfg)
+    sim = Simulator(SimConfig(n_nodes=cfg.n_nodes, mechanism="CUA&SPAA"), jobs)
+    sim.run()
+    for r in sim.records.values():
+        if r.job.jtype is JobType.ONDEMAND:
+            assert r.n_preempted == 0 and r.n_shrunk == 0

@@ -1,0 +1,142 @@
+"""Unit + property tests for the scheduling core (decision kernels, job math)."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (JobSpec, JobType, apportion_shrink, daly_interval,
+                        select_preemption_victims)
+from repro.core.job import RunState
+
+
+# --------------------------------------------------------------- decision
+@given(st.lists(st.tuples(st.integers(1, 512), st.floats(0, 1e6)),
+                min_size=0, max_size=64),
+       st.integers(0, 4096))
+@settings(max_examples=200, deadline=None)
+def test_paa_selection_properties(cand, need):
+    sizes = [c[0] for c in cand]
+    overheads = [c[1] for c in cand]
+    victims, surplus = select_preemption_victims(sizes, overheads, need)
+    if need <= 0:
+        assert victims == []
+        return
+    if sum(sizes) < need:
+        assert victims == [] and surplus == 0
+        return
+    got = sum(sizes[i] for i in victims)
+    assert got >= need and surplus == got - need
+    # minimality: dropping the last victim breaks coverage
+    assert got - sizes[victims[-1]] < need
+    # ascending overhead order
+    ov = [overheads[i] for i in victims]
+    assert ov == sorted(ov)
+
+
+@given(st.lists(st.tuples(st.integers(1, 256), st.integers(0, 255)),
+                min_size=1, max_size=64),
+       st.integers(1, 2048))
+@settings(max_examples=200, deadline=None)
+def test_spaa_apportion_properties(jobs, need):
+    cur = [max(c, m + 1) if c > m else c for c, m in jobs]
+    mn = [min(c, m) for c, m in jobs]
+    sheds = apportion_shrink(cur, mn, need)
+    slack = sum(c - m for c, m in zip(cur, mn))
+    if slack < need:
+        assert sheds == []
+        return
+    assert sum(sheds) == need
+    for s, c, m in zip(sheds, cur, mn):
+        assert 0 <= s <= c - m  # never below n_min
+    # proportionality: jobs with zero slack shed nothing
+    for s, c, m in zip(sheds, cur, mn):
+        if c == m:
+            assert s == 0
+
+
+def test_paa_prefers_cheap_victims():
+    victims, surplus = select_preemption_victims(
+        sizes=[100, 100, 100], overheads=[50.0, 5.0, 500.0], need=150)
+    assert victims == [1, 0] and surplus == 50
+
+
+# --------------------------------------------------------------- Daly model
+def test_daly_interval_formula():
+    tau = daly_interval(600.0, 100 * 3600.0)
+    assert tau == pytest.approx(math.sqrt(2 * 600 * 360000) - 600)
+    assert daly_interval(600.0, math.inf) == math.inf
+
+
+# --------------------------------------------------------------- rigid math
+def _rigid(tau=1000.0, delta=100.0, setup=50.0, t_actual=3500.0, n=10):
+    return JobSpec(0, JobType.RIGID, "p", 0.0, n, t_estimate=5000.0,
+                   t_actual=t_actual, t_setup=setup,
+                   ckpt_overhead=delta, ckpt_interval=tau)
+
+
+def test_rigid_compute_structure():
+    # 3500 = 50 setup + [1000 work + 100 ckpt] x k + tail
+    j = _rigid()
+    # elapsed after setup: 3450 -> 3 full segments (3300) + 150 tail work
+    assert j.compute_time == pytest.approx(3 * 1000 + 150)
+    assert j.work == pytest.approx(3150 * 10)
+
+
+def test_rigid_progress_and_checkpoint_accounting():
+    j = _rigid()
+    rs = RunState(job=j, start_time=0.0, cur_size=j.size)
+    # during setup: no progress
+    assert rs.work_done(25.0) == 0.0
+    # mid first work segment
+    assert rs.work_done(50.0 + 500.0) == pytest.approx(500 * 10)
+    assert rs.checkpointed_work(550.0) == 0.0
+    # right after first checkpoint completes (t = 50 + 1000 + 100)
+    assert rs.checkpointed_work(1151.0) == pytest.approx(1000 * 10)
+    # during a checkpoint, work does not advance
+    assert rs.work_done(50 + 1000 + 50) == pytest.approx(1000 * 10)
+    # natural end = uninterrupted trace runtime
+    assert rs.natural_end(0.0) == pytest.approx(j.t_actual)
+    assert rs.natural_end(2000.0) == pytest.approx(j.t_actual)
+
+
+def test_rigid_preemption_overhead_grows_since_checkpoint():
+    j = _rigid()
+    rs = RunState(job=j, start_time=0.0, cur_size=j.size)
+    o1 = rs.preemption_overhead(1150.0)   # right after ckpt: setup only
+    o2 = rs.preemption_overhead(1150.0 + 500.0)
+    assert o1 == pytest.approx(j.t_setup * j.size)
+    assert o2 == pytest.approx(j.t_setup * j.size + 500 * 10)
+
+
+def test_next_ckpt_completion():
+    j = _rigid()
+    rs = RunState(job=j, start_time=0.0, cur_size=j.size)
+    assert rs.next_ckpt_completion(0.0) == pytest.approx(50 + 1000 + 100)
+    assert rs.next_ckpt_completion(1200.0) == pytest.approx(50 + 2 * 1100)
+    # near the end: no checkpoint after the last segment
+    assert rs.next_ckpt_completion(3400.0) is None
+
+
+def test_malleable_linear_speedup():
+    j = JobSpec(1, JobType.MALLEABLE, "p", 0.0, 100, t_estimate=4000.0,
+                t_actual=2100.0, t_setup=100.0)
+    assert j.n_min == 20
+    assert j.work == pytest.approx(2000 * 100)
+    rs = RunState(job=j, start_time=0.0, cur_size=50)
+    # at half size, compute takes twice as long
+    assert rs.natural_end(0.0) == pytest.approx(100 + 2000 * 100 / 50)
+
+
+def test_malleable_resize_preserves_work():
+    j = JobSpec(1, JobType.MALLEABLE, "p", 0.0, 100, t_estimate=4000.0,
+                t_actual=2100.0, t_setup=100.0)
+    rs = RunState(job=j, start_time=0.0, cur_size=100)
+    t = 600.0  # 500 s of compute done
+    rs.work_at_resize = rs.work_done(t)
+    rs.last_resize = t
+    rs.cur_size = 40
+    assert rs.work_done(t) == pytest.approx(500 * 100)
+    rem = j.work - 500 * 100
+    assert rs.natural_end(t) == pytest.approx(t + rem / 40)

@@ -1,0 +1,73 @@
+"""Workload synthesis properties (paper §IV-A/B) + compression numerics."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import JobType, NoticeKind, WorkloadConfig, generate
+
+
+@given(seed=st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_workload_invariants(seed):
+    cfg = WorkloadConfig(n_jobs=200, n_nodes=2048, seed=seed)
+    jobs = generate(cfg)
+    assert len(jobs) == 200
+    for j in jobs:
+        assert 1 <= j.size <= cfg.n_nodes
+        assert j.t_actual <= j.t_estimate + 1e-6
+        assert j.t_setup < j.t_actual
+        if j.jtype is JobType.MALLEABLE:
+            assert 1 <= j.n_min <= j.size
+        if j.jtype is JobType.ONDEMAND:
+            # paper: large on-demand jobs reassigned
+            assert j.size <= cfg.n_nodes // 2
+            if j.notice_kind is not NoticeKind.NONE:
+                assert j.notice_time <= j.submit_time
+                assert j.est_arrival is not None
+                if j.notice_kind is NoticeKind.LATE:
+                    assert j.submit_time >= j.est_arrival - 1e-6
+                if j.notice_kind is NoticeKind.EARLY:
+                    assert j.submit_time <= j.est_arrival + 1e-6
+    # submit times sorted, ids consecutive
+    assert all(a.submit_time <= b.submit_time
+               for a, b in zip(jobs, jobs[1:]))
+    assert [j.jid for j in jobs] == list(range(200))
+
+
+def test_notice_mix_respected():
+    cfg = WorkloadConfig(n_jobs=3000, n_nodes=2048, seed=3, notice_mix="W2",
+                         frac_od_projects=0.5, frac_rigid_projects=0.3)
+    jobs = generate(cfg)
+    od = [j for j in jobs if j.jtype is JobType.ONDEMAND]
+    assert len(od) > 100
+    frac_acc = np.mean([j.notice_kind is NoticeKind.ACCURATE for j in od])
+    assert 0.55 < frac_acc < 0.85  # W2: 70% accurate notice
+
+
+def test_offered_load_near_target():
+    cfg = WorkloadConfig(n_jobs=1500, n_nodes=4392, seed=0, target_load=1.15,
+                         horizon_days=60.0)  # horizon must not clip the span
+    jobs = generate(cfg)
+    span = max(j.submit_time for j in jobs) - min(j.submit_time for j in jobs)
+    work = sum(j.t_actual * j.size for j in jobs)
+    load = work / (span * cfg.n_nodes)
+    assert 0.9 < load < 1.5
+
+
+def test_int8_compression_error_feedback():
+    """Quantize+error-feedback must be unbiased over steps: the residual
+    carries, so the cumulative applied update converges to the true sum."""
+    from repro.training.train_step import _dequantize_int8, _quantize_int8
+    rng = np.random.default_rng(0)
+    g_true = rng.standard_normal((64, 64)).astype(np.float32)
+    ef = np.zeros_like(g_true)
+    applied = np.zeros_like(g_true)
+    for _ in range(50):
+        g = g_true + ef
+        q, amax = _quantize_int8(g)
+        gq = np.asarray(_dequantize_int8(q, amax))
+        ef = g - gq
+        applied += gq
+    # mean applied update ~= true gradient (error feedback closes the gap)
+    assert np.abs(applied / 50 - g_true).max() < 0.02
