@@ -9,6 +9,7 @@ writes the full row dicts to results/bench/*.json.  Sections:
   fig6        6 mechanisms x W1-W5                  (paper Figure 6)
   fig7        checkpoint frequency sweep            (paper Figure 7)
   obs10       decision latency                      (paper Obs 10)
+  dispatch    policy-API overhead vs seed           (BENCH_scheduler.json)
   roofline    per (arch x shape) roofline terms     (EXPERIMENTS §Roofline)
 """
 from __future__ import annotations
@@ -83,6 +84,11 @@ def main(argv=None) -> int:
         rows = bench_decision.bench_decision_kernels()
         rows.append(bench_decision.bench_decision_e2e())
         _emit("obs10", rows, t0)
+    if want("dispatch"):
+        t0 = time.perf_counter()
+        # always the 600-job trace: the recorded seed baseline is 600 jobs
+        row = bench_scheduler.bench_policy_dispatch()
+        _emit("dispatch", row, t0)
     if want("roofline"):
         t0 = time.perf_counter()
         rows = bench_roofline.rows(multi_pod=False)

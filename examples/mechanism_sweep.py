@@ -1,13 +1,19 @@
-"""Paper Figure 6 in miniature: sweep all six mechanisms over one trace.
+"""Paper Figure 6 in miniature: sweep registered mechanisms over one trace.
 
     PYTHONPATH=src python examples/mechanism_sweep.py [--jobs 400]
+    PYTHONPATH=src python examples/mechanism_sweep.py --mechanisms 'BASE,CUA&STEAL'
+
+Runs through repro.core.experiment.Experiment (process fan-out), so the
+third-party STEAL/POOL policies from the Wagomu port sweep alongside the
+paper's six mechanisms.
 """
 import argparse
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core import (MECHANISMS, SimConfig, Simulator, WorkloadConfig,
-                        collect, generate)
+from repro.core import MECHANISMS, Experiment, WorkloadConfig
+
+DEFAULT_MECHS = ("BASE",) + MECHANISMS + ("CUA&STEAL", "CUA&POOL")
 
 
 def main():
@@ -15,20 +21,22 @@ def main():
     ap.add_argument("--jobs", type=int, default=400)
     ap.add_argument("--seed", type=int, default=1)
     ap.add_argument("--mix", default="W5")
+    ap.add_argument("--mechanisms", default=",".join(DEFAULT_MECHS),
+                    help="comma-separated registered mechanism strings")
+    ap.add_argument("--serial", action="store_true",
+                    help="disable the multiprocessing fan-out")
     args = ap.parse_args()
     cfg = WorkloadConfig(n_nodes=4392, n_jobs=args.jobs, horizon_days=21.0,
-                         target_load=1.15, notice_mix=args.mix,
-                         seed=args.seed)
-    jobs = generate(cfg)
+                         target_load=1.15, notice_mix=args.mix)
+    exp = Experiment(mechanisms=args.mechanisms.split(","), workloads=(cfg,),
+                     seeds=(args.seed,), processes=1 if args.serial else None)
+    result = exp.run()
     hdr = (f"{'mechanism':10s} {'turn_h':>7s} {'rigid_h':>8s} {'mall_h':>7s} "
            f"{'util':>6s} {'instant':>8s} {'pre_r':>6s} {'pre_m':>6s}")
-    print(f"trace: {len(jobs)} jobs, mix={args.mix}\n{hdr}")
-    for mech in ("BASE",) + MECHANISMS:
-        sim = Simulator(SimConfig(n_nodes=cfg.n_nodes, mechanism=mech),
-                        [j for j in jobs])
-        sim.run()
-        m = collect(sim)
-        print(f"{mech:10s} {m.avg_turnaround_h:7.1f} "
+    print(f"trace: {args.jobs} jobs, mix={args.mix}\n{hdr}")
+    for run in result:
+        m = run.metrics
+        print(f"{run.spec.mechanism:10s} {m.avg_turnaround_h:7.1f} "
               f"{m.avg_turnaround_rigid_h:8.1f} "
               f"{m.avg_turnaround_malleable_h:7.1f} "
               f"{m.system_utilization:6.3f} {m.od_instant_start_rate:8.2f} "

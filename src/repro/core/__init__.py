@@ -1,20 +1,45 @@
 """Hybrid workload scheduling on HPC systems (Fan et al., 2021) — core.
 
+Layered architecture::
+
+    job / cluster / decision     job model, node ledger, vectorized kernels
+    policy + policies/           pluggable scheduling policies + registry
+    simulator                    event loop + mechanics (leases, lifecycle)
+    workload / metrics           trace synthesis and evaluation
+    experiment                   mechanisms x workloads x seeds sweeps
+
 Public API:
     JobSpec / JobType / NoticeKind   job model (paper §III-A)
     SimConfig / Simulator            event-driven scheduler (§III-B)
-    MECHANISMS                       the six mechanisms N/CUA/CUP x PAA/SPAA
+    MECHANISMS                       the six legacy mechanisms N/CUA/CUP x PAA/SPAA
+    NoticePolicy / ArrivalPolicy / QueuePolicy / ElasticityPolicy
+                                     policy protocols (repro.core.policy)
+    register_policy / resolve_mechanism / registered_mechanisms
+                                     the string-keyed policy registry
+    Experiment / ExperimentResult    sweep runner with process fan-out
     WorkloadConfig / generate        Theta-like trace synthesis (§IV-A)
     Metrics / collect                evaluation metrics (§IV-D)
     run_mechanism                    one-call simulation entry point
+
+A mechanism string is "<notice>&<arrival>" over registered policy names
+("CUA&SPAA", "CUA&STEAL", ...) or an explicitly registered composite
+("BASE").  See docs/policies.md for writing and registering custom
+policies — new strategies plug in without touching the simulator.
 """
 from .job import JobSpec, JobType, NoticeKind, RunState
 from .cluster import Lease, NodeLedger
 from .decision import (apportion_shrink, expected_releases_before,
                        select_preemption_victims)
-from .simulator import MECHANISMS, JobRecord, SimConfig, Simulator
+from .policy import (ARRIVAL_POLICIES, MECHANISMS, NOTICE_POLICIES,
+                     ArrivalPolicy, ElasticityPolicy, NoticePolicy,
+                     PolicyBundle, QueuePolicy, SchedulerOps, SchedulerView,
+                     get_policy, register_policy, register_mechanism,
+                     registered_mechanisms, registered_policies,
+                     resolve_mechanism)
+from .simulator import JobRecord, SimConfig, Simulator
 from .workload import NOTICE_MIXES, WorkloadConfig, daly_interval, generate
 from .metrics import Metrics, collect
+from .experiment import Experiment, ExperimentResult, RunResult, RunSpec
 
 
 def run_mechanism(mechanism: str, jobs, n_nodes: int, **cfg_kw) -> "Metrics":
@@ -28,7 +53,13 @@ def run_mechanism(mechanism: str, jobs, n_nodes: int, **cfg_kw) -> "Metrics":
 __all__ = [
     "JobSpec", "JobType", "NoticeKind", "RunState", "Lease", "NodeLedger",
     "apportion_shrink", "expected_releases_before", "select_preemption_victims",
-    "MECHANISMS", "JobRecord", "SimConfig", "Simulator",
+    "MECHANISMS", "NOTICE_POLICIES", "ARRIVAL_POLICIES",
+    "NoticePolicy", "ArrivalPolicy", "QueuePolicy", "ElasticityPolicy",
+    "PolicyBundle", "SchedulerView", "SchedulerOps",
+    "get_policy", "register_policy", "register_mechanism",
+    "registered_policies", "registered_mechanisms", "resolve_mechanism",
+    "JobRecord", "SimConfig", "Simulator",
     "NOTICE_MIXES", "WorkloadConfig", "daly_interval", "generate",
     "Metrics", "collect", "run_mechanism",
+    "Experiment", "ExperimentResult", "RunResult", "RunSpec",
 ]

@@ -1,0 +1,351 @@
+"""Pluggable scheduling-policy API (paper §III-B, generalized).
+
+The paper's six mechanisms are {notice} x {arrival} strategy pairs; this
+module turns each axis into a small protocol class so new strategies are
+*data* (registry entries) rather than forks of the event loop:
+
+    NoticePolicy      what happens when an on-demand job sends advance
+                      notice: reserve idle nodes, collect releases, plan
+                      preemptions against the estimated arrival (N/CUA/CUP)
+    ArrivalPolicy     how an *arrived* on-demand job acquires the nodes it
+                      is short of: preemption orderings, shrink apportioning
+                      (PAA/SPAA, plus third-party algorithms such as
+                      STEAL/POOL from the Wagomu malleable-scheduling work)
+    QueuePolicy       ordering of the wait queue and the backfill pass
+                      (FCFS + EASY backfilling by default)
+    ElasticityPolicy  when running malleable jobs absorb vacated or idle
+                      nodes and expand back toward n_max (the paper's
+                      malleability incentive); the seed behavior expands
+                      only via lease repayment
+
+Policies act through two layered handles:
+
+    SchedulerView     read-only window onto simulator state (clock, ledger
+                      pools, queue, running set, estimates)
+    SchedulerOps      the view plus the small set of mutation primitives a
+                      policy may invoke (preempt, shrink, expand, start,
+                      reserve, push_event)
+
+A string-keyed registry maps policy names and mechanism strings to policy
+objects.  Legacy strings ("BASE", "CUA&SPAA", ...) resolve to bundles that
+reproduce the pre-refactor simulator bit-for-bit; any "<notice>&<arrival>"
+combination of registered policies (e.g. "CUA&STEAL") resolves without
+touching the core.
+
+Registering a custom policy::
+
+    from repro.core.policy import ArrivalPolicy, register_policy
+
+    @register_policy("arrival", "GREEDY")
+    class GreedyArrival(ArrivalPolicy):
+        def acquire(self, ops, jid, need):
+            for rid, rs in list(ops.running.items()):
+                if need <= 0:
+                    break
+                if rs.job.jtype is JobType.ONDEMAND:
+                    continue        # on-demand jobs are never preempted
+                need -= rs.cur_size
+                ops.preempt(rid, beneficiary=jid)
+            if ops.reserved_of(jid) + ops.free < ops.jobs[jid].size:
+                return False        # demand unmet: job queues at the front
+            ops.start_od(jid)
+            return True
+
+    # SimConfig(mechanism="CUA&GREEDY") now works everywhere.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import TYPE_CHECKING, Callable, Dict, List, Optional, Tuple
+
+from .job import JobType
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle guard, typing only
+    from .job import JobSpec, RunState
+    from .simulator import Simulator
+
+# Legacy mechanism axes (paper §III-B); kept as public constants.
+NOTICE_POLICIES = ("N", "CUA", "CUP")
+ARRIVAL_POLICIES = ("PAA", "SPAA")
+MECHANISMS = tuple(f"{n}&{a}" for n in NOTICE_POLICIES for a in ARRIVAL_POLICIES)
+
+
+# --------------------------------------------------------------- state views
+class SchedulerView:
+    """Read-only window onto a running :class:`Simulator`.
+
+    Exposes exactly the state a scheduling decision may consult; mutating
+    the returned containers is not supported.  Stable containers and query
+    methods are bound once at construction (the simulator mutates them in
+    place), so policy hot loops pay no delegation frames:
+
+        jobs           jid -> JobSpec for every job in the trace
+        running        jid -> RunState of running jobs
+        queue          waiting jids (FCFS-sorted each scheduling pass)
+        collecting     od jids collecting node releases, notice order
+        od_status      od jid -> "noticed"|"arrived"|"timeout"|"done"
+        est_remaining  jid -> current user-estimate of remaining runtime
+        od_front_map   od jid -> True while pinned to the queue front
+        ledger         the NodeLedger (read-only: never call its mutators)
+        cfg            the SimConfig
+        reserved_of(od) / hold_of(jid)    idle-pool sizes per job
+        avail_for(jid)    nodes the job could start on now (free+hold+own)
+        borrowable(jid)   idle reserved nodes the job may borrow (§III-B1)
+        est_end(rs)       estimated end used by EASY/CUP (user estimate)
+
+    `now` and `free` change every event and are properties.
+    """
+
+    def __init__(self, sim: "Simulator"):
+        self._sim = sim
+        self.cfg = sim.cfg
+        self.jobs: Dict[int, "JobSpec"] = sim.jobs
+        self.running: Dict[int, "RunState"] = sim.running
+        self.queue: List[int] = sim.queue
+        self.collecting: List[int] = sim.collecting
+        self.od_status: Dict[int, str] = sim.od_status
+        self.est_remaining: Dict[int, float] = sim.est_remaining
+        self.od_front_map: Dict[int, bool] = sim.od_front
+        self.ledger = sim.ledger             # read-only by convention
+        self.reserved_of = sim.ledger.reserved_of
+        self.hold_of = sim.ledger.hold_of
+        self.avail_for = sim._avail_for
+        self.borrowable = sim._borrowable
+        self.est_end = sim._est_end
+
+    @property
+    def now(self) -> float:
+        return self._sim.now
+
+    @property
+    def free(self) -> int:
+        return self._sim.ledger.free
+
+    def od_front(self, jid: int) -> bool:
+        return bool(self.od_front_map.get(jid))
+
+
+class SchedulerOps(SchedulerView):
+    """A :class:`SchedulerView` plus the mutation primitives policies use.
+
+    Every mutator is a simulator primitive that keeps the node ledger,
+    lease book, and event heap consistent — policies decide *what* to do,
+    never touch accounting directly:
+
+        push_event(t, kind, data)      schedule a simulator event
+        reserve_from_free(od, want)    move free nodes into od's reservation
+        collect(od)                    enroll od to collect future releases
+        preempt(jid, beneficiary=od)   vacate a running job; nodes route to
+                                       the beneficiary's reservation
+        shrink(jid, k, od)             shed k malleable nodes into od's
+                                       reservation (creates a lease)
+        expand_occupied(jid, k)        grow a malleable by k vacated nodes
+        expand_from_free(jid, k)       grow a malleable from the free pool
+        start_od(jid)                  launch an arrived on-demand job
+        start_backfilled(jid, size, borrow)
+                                       launch a batch job out of FCFS order,
+                                       `borrow` of it on idle reservations
+    """
+
+    def __init__(self, sim: "Simulator"):
+        super().__init__(sim)
+        self.push_event = sim._push
+        self.reserve_from_free = sim.ledger.reserve_from_free
+        self.expand_occupied = sim._expand
+        self.expand_from_free = sim._expand_from_free
+        self.start_od = sim._start_od
+        self.start_backfilled = sim._start_backfilled
+
+    def collect(self, od: int) -> None:
+        """Enroll an on-demand job to collect future node releases."""
+        if od not in self.collecting:
+            self.collecting.append(od)
+
+    def preempt(self, jid: int, beneficiary: Optional[int] = None) -> None:
+        """Vacate a running batch job.  On-demand jobs are never preempted
+        (paper §III-B): the ledger mechanics assume an od restarts from its
+        reservation + free pool only, so this guard turns a policy bug that
+        would corrupt accounting much later into an immediate error."""
+        if self.jobs[jid].jtype is JobType.ONDEMAND:
+            raise ValueError(f"policy tried to preempt on-demand job {jid}; "
+                             "on-demand jobs are never preempted")
+        self._sim._preempt(jid, beneficiary=beneficiary)
+
+    def shrink(self, jid: int, k: int, od: int) -> None:
+        """Shed k nodes from a running *malleable* into od's reservation."""
+        if self.jobs[jid].jtype is not JobType.MALLEABLE:
+            raise ValueError(f"policy tried to shrink non-malleable job {jid}")
+        self._sim._shrink(jid, k, od)
+
+
+# ------------------------------------------------------------ policy protocols
+class Policy:
+    """Base for all policy kinds; `kind`/`name` are set by the registry."""
+
+    kind: str = "?"
+    name: str = "?"
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"<{type(self).__name__} {self.kind}:{self.name}>"
+
+
+class NoticePolicy(Policy):
+    """Reaction to an on-demand job's advance notice (paper §III-B2)."""
+
+    kind = "notice"
+
+    def on_notice(self, ops: SchedulerOps, jid: int) -> None:
+        raise NotImplementedError
+
+
+class ArrivalPolicy(Policy):
+    """Node acquisition for an arrived on-demand job that is `need` short.
+
+    `acquire` must either start the job (via `ops.start_od`) and return
+    True, or return False — the simulator then queues the job at the front
+    where it collects every release until its demand is met.
+    """
+
+    kind = "arrival"
+    #: elasticity policy a "<notice>&<arrival>" mechanism string pairs with
+    preferred_elasticity: str = "NONE"
+
+    def acquire(self, ops: SchedulerOps, jid: int, need: int) -> bool:
+        raise NotImplementedError
+
+
+class QueuePolicy(Policy):
+    """Wait-queue ordering and the backfill pass behind a blocked head."""
+
+    kind = "queue"
+
+    def order_key(self, view: SchedulerView, jid: int):
+        raise NotImplementedError
+
+    def make_order_key(self, view: SchedulerView) -> Callable[[int], tuple]:
+        """Build the sort-key callable the simulator uses on every pass.
+
+        The default wraps :meth:`order_key`; hot-path policies may return
+        a specialized closure instead (the queue re-sorts at every event).
+        """
+        return lambda jid: self.order_key(view, jid)
+
+    def backfill(self, ops: SchedulerOps, head: int) -> None:
+        raise NotImplementedError
+
+
+class ElasticityPolicy(Policy):
+    """When running malleable jobs expand back toward n_max.
+
+    Lease repayment (a shrunk lender reclaiming its nodes when the
+    on-demand borrower completes, paper §III-B3) is core mechanics and
+    always happens; these hooks add *extra* expansion opportunities.
+    """
+
+    kind = "elasticity"
+
+    def absorb_release(self, ops: SchedulerOps, k: int) -> int:
+        """Offered k vacated nodes nobody is waiting for; expand running
+        malleables into them and return the leftover count."""
+        return k
+
+    def on_idle(self, ops: SchedulerOps) -> None:
+        """Called after a scheduling pass; may expand malleables into the
+        free pool when no job is waiting."""
+
+
+# ------------------------------------------------------------------ registry
+_REGISTRY: Dict[str, Dict[str, type]] = {
+    "notice": {}, "arrival": {}, "queue": {}, "elasticity": {},
+}
+_MECHANISM_FACTORIES: Dict[str, Callable[[QueuePolicy], "PolicyBundle"]] = {}
+
+
+def register_policy(kind: str, name: str):
+    """Class decorator: `@register_policy("arrival", "STEAL")`."""
+    if kind not in _REGISTRY:
+        raise ValueError(f"unknown policy kind {kind!r}; "
+                         f"one of {sorted(_REGISTRY)}")
+
+    def deco(cls):
+        cls.kind, cls.name = kind, name
+        _REGISTRY[kind][name] = cls
+        return cls
+    return deco
+
+
+def get_policy(kind: str, name: str) -> Policy:
+    """Instantiate a registered policy by kind and name."""
+    _ensure_builtins()
+    try:
+        return _REGISTRY[kind][name]()
+    except KeyError:
+        raise ValueError(
+            f"unknown {kind} policy {name!r}; registered: "
+            f"{', '.join(sorted(_REGISTRY[kind]))}") from None
+
+
+def registered_policies(kind: str) -> Tuple[str, ...]:
+    _ensure_builtins()
+    return tuple(sorted(_REGISTRY[kind]))
+
+
+def register_mechanism(name: str,
+                       factory: Callable[[QueuePolicy], "PolicyBundle"]):
+    """Map a mechanism string to a bundle factory (takes the queue policy)."""
+    _MECHANISM_FACTORIES[name] = factory
+    return factory
+
+
+def registered_mechanisms() -> Tuple[str, ...]:
+    """Every resolvable mechanism string: explicit registrations plus all
+    <notice>&<arrival> combinations of registered policies."""
+    _ensure_builtins()
+    combos = {f"{n}&{a}" for n in _REGISTRY["notice"]
+              for a in _REGISTRY["arrival"]}
+    return tuple(sorted(combos | set(_MECHANISM_FACTORIES)))
+
+
+@dataclass
+class PolicyBundle:
+    """The four policies one simulation runs with."""
+
+    notice: NoticePolicy
+    arrival: ArrivalPolicy
+    queue: QueuePolicy
+    elasticity: ElasticityPolicy
+    #: False for "BASE": on-demand jobs are plain batch jobs (no notice
+    #: handling, no instant-start arrival path).
+    od_aware: bool = True
+
+
+def resolve_mechanism(name: str, queue_policy: str = "EASY") -> PolicyBundle:
+    """Resolve a mechanism string to a :class:`PolicyBundle`.
+
+    Explicit registrations ("BASE") win; otherwise "<notice>&<arrival>"
+    is parsed against the policy registry, pairing the arrival policy's
+    preferred elasticity.  Raises ValueError naming every registered
+    mechanism when the string resolves to nothing.
+    """
+    _ensure_builtins()
+    queue = get_policy("queue", queue_policy)
+    factory = _MECHANISM_FACTORIES.get(name)
+    if factory is not None:
+        return factory(queue)
+    if "&" in name:
+        n_name, a_name = name.split("&", 1)
+        if n_name in _REGISTRY["notice"] and a_name in _REGISTRY["arrival"]:
+            arrival = _REGISTRY["arrival"][a_name]()
+            elasticity = get_policy("elasticity", arrival.preferred_elasticity)
+            return PolicyBundle(notice=_REGISTRY["notice"][n_name](),
+                                arrival=arrival, queue=queue,
+                                elasticity=elasticity)
+    raise ValueError(
+        f"unknown mechanism {name!r}; registered mechanisms: "
+        f"{', '.join(registered_mechanisms())}")
+
+
+def _ensure_builtins() -> None:
+    """Import the builtin policy package exactly once (registration side
+    effect); deferred to avoid a circular import at module load."""
+    from . import policies  # noqa: F401

@@ -1,19 +1,25 @@
 """Event-driven hybrid-workload scheduling simulator (CQSim-equivalent).
 
-Implements the paper's six mechanisms as {notice} x {arrival} strategies:
+The simulator owns *mechanics* — the event heap, the node ledger, lease
+bookkeeping, run/end lifecycle — and delegates every scheduling *decision*
+to a :class:`~repro.core.policy.PolicyBundle` resolved from
+``SimConfig.mechanism``:
 
-    notice  : N (nothing) | CUA (collect-until-actual-arrival)
-              | CUP (collect-until-predicted-arrival, planned preemption)
-    arrival : PAA (preempt ascending overhead) | SPAA (shrink-then-PAA)
+    notice      what to do at advance notice   (N / CUA / CUP, ...)
+    arrival     node acquisition at od arrival (PAA / SPAA / STEAL / POOL, ...)
+    queue       wait-queue order + backfill    (EASY / FCFS, ...)
+    elasticity  malleable expand-back          (NONE / BALANCE, ...)
 
-plus the lifecycle rules: lease return at on-demand completion and
-reservation release 10 min after a no-show's estimated arrival.  Waiting
-jobs are ordered by FCFS and started with EASY backfilling; reserved nodes
-may host backfilled jobs that are preempted the instant the on-demand job
-arrives (paper §III-B1).
+Legacy strings ("BASE", "CUA&SPAA", ...) reproduce the paper's six
+mechanisms bit-for-bit; any registered "<notice>&<arrival>" combination
+(e.g. "CUA&STEAL") runs without touching this file.  The lifecycle rules
+are the paper's: lease return at on-demand completion and reservation
+release 10 min after a no-show's estimated arrival; waiting jobs are
+FCFS + EASY backfilled, and reserved nodes may host backfilled jobs that
+are preempted the instant the on-demand job arrives (paper §III-B1).
 
-The simulator is baseline-faithful: with mechanism="BASE" every job is
-treated as a plain batch job under FCFS/EASY (paper Table II).
+With mechanism="BASE" every job is a plain batch job under FCFS/EASY
+(paper Table II).
 """
 from __future__ import annotations
 
@@ -25,33 +31,34 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 from .cluster import Lease, NodeLedger
-from .decision import (apportion_shrink, expected_releases_before,
-                       select_preemption_victims)
 from .job import JobSpec, JobType, NoticeKind, RunState
-
-NOTICE_POLICIES = ("N", "CUA", "CUP")
-ARRIVAL_POLICIES = ("PAA", "SPAA")
-MECHANISMS = tuple(f"{n}&{a}" for n in NOTICE_POLICIES for a in ARRIVAL_POLICIES)
+from .policy import (ARRIVAL_POLICIES, MECHANISMS, NOTICE_POLICIES,
+                     PolicyBundle, SchedulerOps, resolve_mechanism)
 
 
 @dataclass
 class SimConfig:
     n_nodes: int
-    mechanism: str = "CUA&SPAA"          # "BASE" or one of MECHANISMS
+    mechanism: str = "CUA&SPAA"          # "BASE" or any registered mechanism
     release_threshold: float = 600.0      # release reservation 10 min past est
     malleable_warning: float = 120.0      # Amazon-style 2-min warning
     backfill_depth: int = 100
     allow_reserved_backfill: bool = True
     instant_eps: float = 1.0              # wait <= eps counts as instant start
     track_decision_time: bool = False
+    queue_policy: str = "EASY"            # registered QueuePolicy name
 
+    # legacy introspection helpers; composite mechanisms ("BASE") have no
+    # "&" and report themselves on both axes.
     @property
     def notice_policy(self) -> str:
-        return "BASE" if self.mechanism == "BASE" else self.mechanism.split("&")[0]
+        return self.mechanism.split("&", 1)[0] if "&" in self.mechanism \
+            else self.mechanism
 
     @property
     def arrival_policy(self) -> str:
-        return "BASE" if self.mechanism == "BASE" else self.mechanism.split("&")[1]
+        return self.mechanism.split("&", 1)[1] if "&" in self.mechanism \
+            else self.mechanism
 
 
 @dataclass
@@ -75,7 +82,8 @@ class Simulator:
     """One simulation run over a fixed job list."""
 
     def __init__(self, cfg: SimConfig, jobs: List[JobSpec]):
-        assert cfg.mechanism == "BASE" or cfg.mechanism in MECHANISMS, cfg.mechanism
+        self.policies: PolicyBundle = resolve_mechanism(cfg.mechanism,
+                                                        cfg.queue_policy)
         self.cfg = cfg
         self.jobs: Dict[int, JobSpec] = {j.jid: j for j in jobs}
         self.ledger = NodeLedger(cfg.n_nodes)
@@ -92,6 +100,8 @@ class Simulator:
         self.progress: Dict[int, dict] = {}  # preempted-job carry-over state
         self.est_remaining: Dict[int, float] = {j.jid: j.t_estimate for j in jobs}
         self._epochs: Dict[int, int] = {}    # monotonic per-jid END epoch
+        self.ops = SchedulerOps(self)        # the handle policies act through
+        self._queue_key = self.policies.queue.make_order_key(self.ops)
         # metrics accumulators
         self.occupied_integral = 0.0
         self.waste_node_seconds = 0.0
@@ -102,7 +112,7 @@ class Simulator:
         for j in jobs:
             self._push(j.submit_time, "submit", (j.jid,))
             if (j.jtype is JobType.ONDEMAND and j.notice_kind is not NoticeKind.NONE
-                    and cfg.mechanism != "BASE"):
+                    and self.policies.od_aware):
                 self._push(j.notice_time, "notice", (j.jid,))
                 self._push(j.est_arrival + cfg.release_threshold,
                            "od_timeout", (j.jid,))
@@ -128,7 +138,7 @@ class Simulator:
     # ------------------------------------------------------------- submission
     def _on_submit(self, jid: int) -> None:
         job = self.jobs[jid]
-        if job.jtype is JobType.ONDEMAND and self.cfg.mechanism != "BASE":
+        if job.jtype is JobType.ONDEMAND and self.policies.od_aware:
             self._od_arrival(jid)
         else:
             self.queue.append(jid)
@@ -136,57 +146,10 @@ class Simulator:
 
     # ---------------------------------------------------------- advance notice
     def _on_notice(self, jid: int) -> None:
-        job = self.jobs[jid]
         if self.od_status.get(jid) is not None:
             return  # already arrived (defensive)
         self.od_status[jid] = "noticed"
-        pol = self.cfg.notice_policy
-        if pol == "N":
-            return
-        got = self.ledger.reserve_from_free(jid, job.size)
-        if got < job.size:
-            self.collecting.append(jid)
-            if pol == "CUP":
-                self._cup_plan(jid)
-
-    def _cup_plan(self, jid: int) -> None:
-        """Plan preemptions so the od job's demand is met by est_arrival."""
-        job = self.jobs[jid]
-        need = job.size - self.ledger.reserved_of(jid)
-        ends, sizes = [], []
-        for rs in self.running.values():
-            ends.append(self._est_end(rs))
-            sizes.append(rs.cur_size)
-        need -= expected_releases_before(ends, sizes, job.est_arrival)
-        if need <= 0:
-            return
-        # candidates: rigid right after an upcoming checkpoint (cheap), then
-        # malleables at est_arrival - warning, then any rigid at est_arrival.
-        cand: List[Tuple[float, float, int]] = []  # (overhead, preempt_t, jid)
-        for rid, rs in self.running.items():
-            j = rs.job
-            if j.jtype is JobType.ONDEMAND:
-                continue
-            if j.jtype is JobType.MALLEABLE:
-                t_p = max(self.now, job.est_arrival - self.cfg.malleable_warning)
-                cand.append((j.t_setup * j.size, t_p, rid))
-            else:
-                nc = rs.next_ckpt_completion(self.now)
-                if nc is not None and nc <= job.est_arrival:
-                    cand.append((j.t_setup * j.size, nc, rid))
-                else:
-                    t_p = max(self.now, job.est_arrival - 1.0)
-                    lost = rs.work_done(t_p) - rs.checkpointed_work(t_p)
-                    cand.append((j.t_setup * j.size + max(lost, 0.0), t_p, rid))
-        cand.sort()
-        for overhead, t_p, rid in cand:
-            if need <= 0:
-                break
-            rs = self.running.get(rid)
-            if rs is None:
-                continue
-            self._push(t_p, "planned_preempt", (jid, rid, rs.epoch))
-            need -= rs.cur_size
+        self.policies.notice.on_notice(self.ops, jid)
 
     def _on_planned_preempt(self, od_jid: int, victim: int, epoch: int) -> None:
         if self.od_status.get(od_jid) != "noticed":
@@ -212,7 +175,6 @@ class Simulator:
     # ------------------------------------------------------------- od arrival
     def _od_arrival(self, jid: int) -> None:
         job = self.jobs[jid]
-        prev = self.od_status.get(jid)
         self.od_status[jid] = "arrived"
         if jid in self.collecting:
             self.collecting.remove(jid)
@@ -221,16 +183,11 @@ class Simulator:
         for rid in [r for r, rs in self.running.items() if rs.borrowed.get(jid)]:
             self._preempt(rid, beneficiary=jid)
         need = job.size - self.ledger.reserved_of(jid) - self.ledger.free
-        started = False
         if need <= 0:
             self._start_od(jid)
             started = True
         else:
-            pol = self.cfg.arrival_policy
-            if pol == "SPAA":
-                started = self._try_shrink(jid, need)
-            if not started:
-                started = self._try_paa(jid, need)
+            started = self.policies.arrival.acquire(self.ops, jid, need)
         if self.cfg.track_decision_time:
             self.decision_times.append(_walltime.perf_counter() - t0)
         if started:
@@ -243,41 +200,6 @@ class Simulator:
             if jid not in self.collecting:
                 self.collecting.append(jid)
         self._schedule()
-
-    def _try_shrink(self, jid: int, need: int) -> bool:
-        """SPAA: shrink running malleables evenly; False if supply too small."""
-        mall = [(rid, rs) for rid, rs in self.running.items()
-                if rs.job.jtype is JobType.MALLEABLE and rs.cur_size > rs.job.n_min]
-        if not mall:
-            return False
-        sheds = apportion_shrink([rs.cur_size for _, rs in mall],
-                                 [rs.job.n_min for _, rs in mall], need)
-        if not sheds:
-            return False
-        for (rid, _), k in zip(mall, sheds):
-            if k > 0:
-                self._shrink(rid, k, jid)
-        self._start_od(jid)
-        return True
-
-    def _try_paa(self, jid: int, need: int) -> bool:
-        """PAA: preempt running jobs in ascending preemption-overhead order."""
-        cand = [(rid, rs) for rid, rs in self.running.items()
-                if rs.job.jtype is not JobType.ONDEMAND]
-        # nodes borrowed from other reservations return to their owners, not
-        # to this job: only the un-borrowed remainder counts as supply.
-        supply = [rs.cur_size - sum(rs.borrowed.values()) for _, rs in cand]
-        victims, _ = select_preemption_victims(
-            supply, [rs.preemption_overhead(self.now) for _, rs in cand], need)
-        if not victims and need > 0:
-            return False
-        for i in victims:
-            self._preempt(cand[i][0], beneficiary=jid)
-        job = self.jobs[jid]
-        if self.ledger.reserved_of(jid) + self.ledger.free < job.size:
-            return False  # borrowed-node routing starved us; wait in queue
-        self._start_od(jid)
-        return True
 
     def _start_od(self, jid: int) -> None:
         job = self.jobs[jid]
@@ -334,10 +256,13 @@ class Simulator:
                 self.ledger.occupied_to_reserved(beneficiary, k)
                 self._lease(beneficiary, jid, k, "preempt")
                 freed -= k
+        self._epochs[jid] = self._epochs.get(jid, 0) + 1  # invalidate pending END
+        # re-queue before routing: the elasticity policy must see the victim
+        # waiting, or absorb_release would hand its nodes to running
+        # malleables (FCFS key keeps the original submit time).
+        self.queue.append(jid)
         if freed > 0:
             self._route_release(freed)
-        self._epochs[jid] = self._epochs.get(jid, 0) + 1  # invalidate pending END
-        self.queue.append(jid)  # resubmitted; FCFS key keeps original submit
 
     def _shrink(self, jid: int, k: int, od: int) -> None:
         rs = self.running[jid]
@@ -363,6 +288,17 @@ class Simulator:
         rs.last_resize = max(self.now, rs.last_resize)
         rs.cur_size += grow
         self._reschedule_end(jid)
+
+    def _expand_from_free(self, jid: int, k: int) -> int:
+        """Grow a running malleable by up to k free-pool nodes; returns the
+        number actually granted (ElasticityPolicy.on_idle uses this)."""
+        rs = self.running[jid]
+        k = min(k, self.ledger.free, rs.job.n_max - rs.cur_size)
+        if k <= 0:
+            return 0
+        self.ledger.allocate(k, from_free=k)
+        self._expand(jid, k)
+        return k
 
     def _lease(self, od: int, lender: int, k: int, kind: str) -> None:
         self.leases.setdefault(od, []).append(Lease(lender, k, kind))
@@ -447,7 +383,8 @@ class Simulator:
         return avail
 
     def _route_release(self, k: int) -> None:
-        """Vacated occupied nodes -> collecting reservations, then free pool."""
+        """Vacated occupied nodes -> collecting reservations, then the
+        elasticity policy, then the free pool."""
         assert k >= 0
         for od in list(self.collecting):
             if k == 0:
@@ -465,13 +402,11 @@ class Simulator:
                     self.queue.remove(od)
                     self._start_od(od)
         if k > 0:
+            k = self.policies.elasticity.absorb_release(self.ops, k)
+        if k > 0:
             self.ledger.free_nodes(k)
 
     # ------------------------------------------------------------- scheduling
-    def _queue_key(self, jid: int):
-        return (0 if self.od_front.get(jid) else 1,
-                self.jobs[jid].submit_time, jid)
-
     def _schedule(self) -> None:
         if self._in_schedule:
             return
@@ -495,8 +430,9 @@ class Simulator:
                         and self._try_start_borrowed(head)):
                     changed = True
                     continue
-                self._backfill(head)
+                self.policies.queue.backfill(self.ops, head)
                 break
+            self.policies.elasticity.on_idle(self.ops)
         finally:
             self._in_schedule = False
 
@@ -589,55 +525,10 @@ class Simulator:
         self._start_backfilled(jid, size, borrow)
         return True
 
-    def _shadow(self, head: int) -> Tuple[float, int]:
-        """EASY reservation for the queue head over estimated releases."""
-        job = self.jobs[head]
-        need = job.n_min if job.jtype is JobType.MALLEABLE else job.size
-        avail = self._avail_for(head)
-        if avail >= need:
-            return self.now, avail - need
-        rel = sorted((self._est_end(rs), rs.cur_size) for rs in self.running.values())
-        for t, k in rel:
-            avail += k
-            if avail >= need:
-                return t, avail - need
-        return math.inf, 0
-
-    def _backfill(self, head: int) -> None:
-        t_shadow, extra = self._shadow(head)
-        for jid in list(self.queue[1:1 + self.cfg.backfill_depth]):
-            job = self.jobs[jid]
-            if job.jtype is JobType.ONDEMAND:
-                continue  # arrived ods start only via their own path
-            need_min = job.n_min if job.jtype is JobType.MALLEABLE else job.size
-            idle_reserved = self._borrowable(jid) \
-                if self.cfg.allow_reserved_backfill else 0
-            plain = self.ledger.free + self.ledger.hold_of(jid)
-            total = plain + idle_reserved
-            if total < need_min:
-                continue
-            size = job.size if job.jtype is not JobType.MALLEABLE else \
-                min(job.n_max, total)
-            from_plain = min(size, plain)
-            borrow = size - from_plain
-            est_run = self.est_remaining[jid]
-            if job.jtype is JobType.MALLEABLE:
-                est_run = job.t_setup + (est_run - job.t_setup) * job.n_max / size
-            fits_hole = self.now + est_run <= t_shadow
-            uses_free = max(0, from_plain - self.ledger.hold_of(jid))
-            if not fits_hole and uses_free > extra:
-                continue
-            if not fits_hole:
-                extra -= uses_free
-            self._start_backfilled(jid, size, borrow)
-            idle_reserved -= borrow
-
     def _start_backfilled(self, jid: int, size: int, borrow: int) -> None:
         self.queue.remove(jid)
         from_hold = min(self.ledger.hold_of(jid), size - borrow)
         from_free = size - borrow - from_hold
-        if from_hold:
-            pass
         self.ledger.allocate(size - borrow, from_free=from_free,
                              from_hold=from_hold, hold_jid=jid if from_hold else None)
         borrowed: Dict[int, int] = {}

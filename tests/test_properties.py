@@ -1,0 +1,129 @@
+"""Randomized property tests (drain, conservation, kernel invariants).
+
+Guarded by importorskip: hypothesis ships via requirements-dev.txt and is
+optional — without it this module skips instead of failing collection.
+"""
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (MECHANISMS, JobType, NoticeKind, SimConfig, Simulator,
+                        WorkloadConfig, apportion_shrink, collect, generate,
+                        select_preemption_victims)
+
+# new-policy composites ride the same drain/conservation properties
+EXTRA_MECHANISMS = ("CUA&STEAL", "CUA&POOL")
+
+
+# ------------------------------------------------------------------ workload
+@given(seed=st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_workload_invariants(seed):
+    cfg = WorkloadConfig(n_jobs=200, n_nodes=2048, seed=seed)
+    jobs = generate(cfg)
+    assert len(jobs) == 200
+    for j in jobs:
+        assert 1 <= j.size <= cfg.n_nodes
+        assert j.t_actual <= j.t_estimate + 1e-6
+        assert j.t_setup < j.t_actual
+        if j.jtype is JobType.MALLEABLE:
+            assert 1 <= j.n_min <= j.size
+        if j.jtype is JobType.ONDEMAND:
+            # paper: large on-demand jobs reassigned
+            assert j.size <= cfg.n_nodes // 2
+            if j.notice_kind is not NoticeKind.NONE:
+                assert j.notice_time <= j.submit_time
+                assert j.est_arrival is not None
+                if j.notice_kind is NoticeKind.LATE:
+                    assert j.submit_time >= j.est_arrival - 1e-6
+                if j.notice_kind is NoticeKind.EARLY:
+                    assert j.submit_time <= j.est_arrival + 1e-6
+    # submit times sorted, ids consecutive
+    assert all(a.submit_time <= b.submit_time
+               for a, b in zip(jobs, jobs[1:]))
+    assert [j.jid for j in jobs] == list(range(200))
+
+
+# --------------------------------------------------------- decision kernels
+@given(st.lists(st.tuples(st.integers(1, 512), st.floats(0, 1e6)),
+                min_size=0, max_size=64),
+       st.integers(0, 4096))
+@settings(max_examples=200, deadline=None)
+def test_paa_selection_properties(cand, need):
+    sizes = [c[0] for c in cand]
+    overheads = [c[1] for c in cand]
+    victims, surplus = select_preemption_victims(sizes, overheads, need)
+    if need <= 0:
+        assert victims == []
+        return
+    if sum(sizes) < need:
+        assert victims == [] and surplus == 0
+        return
+    got = sum(sizes[i] for i in victims)
+    assert got >= need and surplus == got - need
+    # minimality: dropping the last victim breaks coverage
+    assert got - sizes[victims[-1]] < need
+    # ascending overhead order
+    ov = [overheads[i] for i in victims]
+    assert ov == sorted(ov)
+
+
+@given(st.lists(st.tuples(st.integers(1, 256), st.integers(0, 255)),
+                min_size=1, max_size=64),
+       st.integers(1, 2048))
+@settings(max_examples=200, deadline=None)
+def test_spaa_apportion_properties(jobs, need):
+    cur = [max(c, m + 1) if c > m else c for c, m in jobs]
+    mn = [min(c, m) for c, m in jobs]
+    sheds = apportion_shrink(cur, mn, need)
+    slack = sum(c - m for c, m in zip(cur, mn))
+    if slack < need:
+        assert sheds == []
+        return
+    assert sum(sheds) == need
+    for s, c, m in zip(sheds, cur, mn):
+        assert 0 <= s <= c - m  # never below n_min
+    # proportionality: jobs with zero slack shed nothing
+    for s, c, m in zip(sheds, cur, mn):
+        if c == m:
+            assert s == 0
+
+
+# ------------------------------------------------------------ property: drain
+@given(seed=st.integers(0, 10_000),
+       mech=st.sampled_from(("BASE",) + MECHANISMS + EXTRA_MECHANISMS))
+@settings(max_examples=25, deadline=None)
+def test_random_workload_drains_and_conserves_nodes(seed, mech):
+    """Every random workload completes under every mechanism; the node
+    ledger invariant (checked at every event) never trips; metrics finite."""
+    cfg = WorkloadConfig(n_jobs=60, n_nodes=512, n_projects=12,
+                         horizon_days=4.0, seed=seed)
+    jobs = generate(cfg)
+    sim = Simulator(SimConfig(n_nodes=cfg.n_nodes, mechanism=mech), jobs)
+    sim.run()
+    m = collect(sim)
+    assert m.n_completed == m.n_jobs
+    assert 0.0 <= m.system_utilization <= 1.0
+    for r in sim.records.values():
+        assert r.completion is not None
+        assert r.first_start is not None
+        assert r.first_start >= r.job.submit_time - 1e-9
+        assert r.completion >= r.first_start
+
+
+@given(seed=st.integers(0, 10_000),
+       mech=st.sampled_from(("CUA&SPAA",) + EXTRA_MECHANISMS))
+@settings(max_examples=10, deadline=None)
+def test_od_jobs_never_preempted(seed, mech):
+    cfg = WorkloadConfig(n_jobs=80, n_nodes=512, n_projects=12,
+                         horizon_days=4.0, seed=seed, frac_od_projects=0.3,
+                         frac_rigid_projects=0.4)
+    jobs = generate(cfg)
+    sim = Simulator(SimConfig(n_nodes=cfg.n_nodes, mechanism=mech), jobs)
+    sim.run()
+    for r in sim.records.values():
+        if r.job.jtype is JobType.ONDEMAND:
+            assert r.n_preempted == 0 and r.n_shrunk == 0

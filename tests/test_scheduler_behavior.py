@@ -1,10 +1,12 @@
-"""Behavioral micro-scenarios for the six mechanisms (paper §III-B)."""
-import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+"""Behavioral micro-scenarios for the six mechanisms (paper §III-B).
 
-from repro.core import (MECHANISMS, JobSpec, JobType, NoticeKind, SimConfig,
-                        Simulator, WorkloadConfig, collect, generate)
+Randomized (hypothesis) drain/invariant properties live in
+tests/test_properties.py, which importorskips hypothesis so a checkout
+without the dev extras still collects and runs these deterministic tests.
+"""
+import pytest
+
+from repro.core import (JobSpec, JobType, NoticeKind, SimConfig, Simulator)
 
 N = 100  # cluster size for micro-scenarios
 
@@ -176,38 +178,3 @@ def test_rigid_wont_borrow_reserved_past_est_arrival():
     assert sim.records[1].instant
     assert sim.records[2].n_preempted == 0
     assert sim.records[2].first_start > 1000.0
-
-
-# ------------------------------------------------------------ property: drain
-@given(seed=st.integers(0, 10_000), mech=st.sampled_from(("BASE",) + MECHANISMS))
-@settings(max_examples=25, deadline=None)
-def test_random_workload_drains_and_conserves_nodes(seed, mech):
-    """Every random workload completes under every mechanism; the node
-    ledger invariant (checked at every event) never trips; metrics finite."""
-    cfg = WorkloadConfig(n_jobs=60, n_nodes=512, n_projects=12,
-                         horizon_days=4.0, seed=seed)
-    jobs = generate(cfg)
-    sim = Simulator(SimConfig(n_nodes=cfg.n_nodes, mechanism=mech), jobs)
-    sim.run()
-    m = collect(sim)
-    assert m.n_completed == m.n_jobs
-    assert 0.0 <= m.system_utilization <= 1.0
-    for r in sim.records.values():
-        assert r.completion is not None
-        assert r.first_start is not None
-        assert r.first_start >= r.job.submit_time - 1e-9
-        assert r.completion >= r.first_start
-
-
-@given(seed=st.integers(0, 10_000))
-@settings(max_examples=10, deadline=None)
-def test_od_jobs_never_preempted(seed):
-    cfg = WorkloadConfig(n_jobs=80, n_nodes=512, n_projects=12,
-                         horizon_days=4.0, seed=seed, frac_od_projects=0.3,
-                         frac_rigid_projects=0.4)
-    jobs = generate(cfg)
-    sim = Simulator(SimConfig(n_nodes=cfg.n_nodes, mechanism="CUA&SPAA"), jobs)
-    sim.run()
-    for r in sim.records.values():
-        if r.job.jtype is JobType.ONDEMAND:
-            assert r.n_preempted == 0 and r.n_shrunk == 0

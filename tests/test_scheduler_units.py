@@ -1,61 +1,18 @@
-"""Unit + property tests for the scheduling core (decision kernels, job math)."""
+"""Unit tests for the scheduling core (decision kernels, job math).
+
+Randomized (hypothesis) properties of the decision kernels live in
+tests/test_properties.py, which importorskips hypothesis so a checkout
+without the dev extras still collects and runs these deterministic tests.
+"""
 import math
 
-import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
-from repro.core import (JobSpec, JobType, apportion_shrink, daly_interval,
-                        select_preemption_victims)
+from repro.core import JobSpec, JobType, daly_interval, select_preemption_victims
 from repro.core.job import RunState
 
 
 # --------------------------------------------------------------- decision
-@given(st.lists(st.tuples(st.integers(1, 512), st.floats(0, 1e6)),
-                min_size=0, max_size=64),
-       st.integers(0, 4096))
-@settings(max_examples=200, deadline=None)
-def test_paa_selection_properties(cand, need):
-    sizes = [c[0] for c in cand]
-    overheads = [c[1] for c in cand]
-    victims, surplus = select_preemption_victims(sizes, overheads, need)
-    if need <= 0:
-        assert victims == []
-        return
-    if sum(sizes) < need:
-        assert victims == [] and surplus == 0
-        return
-    got = sum(sizes[i] for i in victims)
-    assert got >= need and surplus == got - need
-    # minimality: dropping the last victim breaks coverage
-    assert got - sizes[victims[-1]] < need
-    # ascending overhead order
-    ov = [overheads[i] for i in victims]
-    assert ov == sorted(ov)
-
-
-@given(st.lists(st.tuples(st.integers(1, 256), st.integers(0, 255)),
-                min_size=1, max_size=64),
-       st.integers(1, 2048))
-@settings(max_examples=200, deadline=None)
-def test_spaa_apportion_properties(jobs, need):
-    cur = [max(c, m + 1) if c > m else c for c, m in jobs]
-    mn = [min(c, m) for c, m in jobs]
-    sheds = apportion_shrink(cur, mn, need)
-    slack = sum(c - m for c, m in zip(cur, mn))
-    if slack < need:
-        assert sheds == []
-        return
-    assert sum(sheds) == need
-    for s, c, m in zip(sheds, cur, mn):
-        assert 0 <= s <= c - m  # never below n_min
-    # proportionality: jobs with zero slack shed nothing
-    for s, c, m in zip(sheds, cur, mn):
-        if c == m:
-            assert s == 0
-
-
 def test_paa_prefers_cheap_victims():
     victims, surplus = select_preemption_victims(
         sizes=[100, 100, 100], overheads=[50.0, 5.0, 500.0], need=150)
