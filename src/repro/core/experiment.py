@@ -26,7 +26,7 @@ from typing import Dict, Iterator, List, Mapping, Optional, Sequence, Tuple
 import numpy as np
 
 from .metrics import Metrics, collect
-from .policy import resolve_mechanism
+from .policy import UnknownPolicyError, resolve_mechanism
 from .simulator import SimConfig, Simulator
 from .workload import WorkloadConfig, generate
 
@@ -106,12 +106,12 @@ class Experiment:
             except (ImportError, NotImplementedError, OSError,
                     PermissionError, BrokenProcessPool):
                 pass  # no usable subprocess support: degrade to serial
-            except ValueError as err:
-                # the mechanisms resolved in-process above, so this can only
-                # be spawn-start workers missing parent-registered custom
-                # policies; genuine simulation errors propagate
-                if not str(err).startswith("unknown mechanism"):
-                    raise
+            except UnknownPolicyError:
+                # the mechanisms resolved in-process above, so a registry
+                # miss can only be spawn-start workers lacking the
+                # parent-registered custom policies: degrade to serial.
+                # Genuine simulation errors propagate
+                pass
         return ExperimentResult([_execute(s) for s in specs])
 
 
@@ -136,6 +136,8 @@ class ExperimentResult:
             for f in dataclass_fields(wls[0]):
                 if f.name == "notice_mix":
                     continue  # always emitted
+                if f.name == "seed":
+                    continue  # template seed is replaced by RunSpec.seed
                 if len({getattr(w, f.name) for w in wls}) > 1:
                     varying.append(f.name)
         out = []

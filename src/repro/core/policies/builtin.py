@@ -144,25 +144,27 @@ class ShrinkThenPreempt(PreemptAscendingOverhead):
 
 
 # -------------------------------------------------------------------- queue
+def _fcfs_key(front_get, jobs, jid: int):
+    """FCFS with arrived on-demand jobs pinned to the queue front; the one
+    definition behind both order_key and the specialized closure."""
+    return (0 if front_get(jid) else 1, jobs[jid].submit_time, jid)
+
+
 @register_policy("queue", "EASY")
 class FcfsEasyBackfill(QueuePolicy):
     """FCFS order (arrived on-demand jobs pinned to the front) with EASY
     backfilling behind a blocked head, optionally onto idle reservations."""
 
     def order_key(self, view: SchedulerView, jid: int):
-        return (0 if view.od_front(jid) else 1,
-                view.jobs[jid].submit_time, jid)
+        return _fcfs_key(view.od_front_map.get, view.jobs, jid)
 
     def make_order_key(self, view: SchedulerView):
         if type(self).order_key is not FcfsEasyBackfill.order_key:
             # subclass customized the ordering: use the generic wrapper so
             # the override actually takes effect
             return super().make_order_key(view)
-        jobs, front = view.jobs, view.od_front_map
-
-        def key(jid: int):
-            return (0 if front.get(jid) else 1, jobs[jid].submit_time, jid)
-        return key
+        front_get, jobs = view.od_front_map.get, view.jobs
+        return lambda jid: _fcfs_key(front_get, jobs, jid)
 
     def _shadow(self, view: SchedulerView, head: int) -> Tuple[float, int]:
         """EASY reservation for the queue head over estimated releases."""

@@ -20,6 +20,7 @@ their instant-start guarantee (paper Obs 9).
 """
 from __future__ import annotations
 
+import heapq
 from typing import Dict, List, Optional, Tuple
 
 from ..job import JobSpec, JobType, RunState
@@ -64,18 +65,24 @@ class AverageStealAgreement(PreemptAscendingOverhead):
     def _select_sheds(self, ops: SchedulerOps,
                       need: int) -> Optional[List[Tuple[int, int]]]:
         """One node per round from the malleable with the highest fill
-        fraction; None if the combined slack cannot cover `need`."""
+        fraction; None if the combined slack cannot cover `need`.
+
+        Heap keyed on (-fill, arrival order) so each round is O(log m)
+        with the same winner (ties to the first malleable) as a full
+        max() scan."""
         mall = [(rid, rs) for rid, rs in _running_malleables(ops)
                 if rs.cur_size > rs.job.n_min]
         if sum(rs.cur_size - rs.job.n_min for _, rs in mall) < need:
             return None
         shed: Dict[int, int] = {rid: 0 for rid, _ in mall}
+        heap = [(-fill_fraction(rs), i) for i, (_, rs) in enumerate(mall)]
+        heapq.heapify(heap)
         for _ in range(need):
-            rid, rs = max(
-                (it for it in mall
-                 if it[1].cur_size - shed[it[0]] > it[1].job.n_min),
-                key=lambda it: fill_fraction(it[1], -shed[it[0]]))
+            _, i = heapq.heappop(heap)
+            rid, rs = mall[i]
             shed[rid] += 1
+            if rs.cur_size - shed[rid] > rs.job.n_min:
+                heapq.heappush(heap, (-fill_fraction(rs, -shed[rid]), i))
         return [(rid, k) for rid, k in shed.items() if k > 0]
 
 
@@ -138,17 +145,20 @@ class AverageBalance(ElasticityPolicy):
     def _apportion(self, ops: SchedulerOps,
                    k: int) -> List[Tuple[int, int]]:
         """Hand nodes one at a time to the malleable with the lowest fill
-        fraction until supply or expandability runs out."""
+        fraction until supply or expandability runs out.
+
+        Heap keyed on (fill, arrival order): O(log m) per node with the
+        same winner (ties to the first malleable) as a full min() scan."""
         mall = [(rid, rs) for rid, rs in _running_malleables(ops)
                 if rs.cur_size < rs.job.n_max]
         grow: Dict[int, int] = {rid: 0 for rid, _ in mall}
-        while k > 0:
-            open_ = [it for it in mall
-                     if it[1].cur_size + grow[it[0]] < it[1].job.n_max]
-            if not open_:
-                break
-            rid, rs = min(open_, key=lambda it: fill_fraction(it[1],
-                                                              grow[it[0]]))
+        heap = [(fill_fraction(rs), i) for i, (_, rs) in enumerate(mall)]
+        heapq.heapify(heap)
+        while k > 0 and heap:
+            _, i = heapq.heappop(heap)
+            rid, rs = mall[i]
             grow[rid] += 1
             k -= 1
+            if rs.cur_size + grow[rid] < rs.job.n_max:
+                heapq.heappush(heap, (fill_fraction(rs, grow[rid]), i))
         return [(rid, g) for rid, g in grow.items() if g > 0]

@@ -34,6 +34,7 @@ touching the core.
 
 Registering a custom policy::
 
+    from repro.core.job import JobType
     from repro.core.policy import ArrivalPolicy, register_policy
 
     @register_policy("arrival", "GREEDY")
@@ -255,6 +256,14 @@ class ElasticityPolicy(Policy):
 
 
 # ------------------------------------------------------------------ registry
+class UnknownPolicyError(ValueError):
+    """A mechanism or policy name that is not in the registry.
+
+    ValueError subclass for backward compatibility; Experiment relies on
+    the distinct type to tell registry misses in spawn-start workers apart
+    from genuine simulation errors."""
+
+
 _REGISTRY: Dict[str, Dict[str, type]] = {
     "notice": {}, "arrival": {}, "queue": {}, "elasticity": {},
 }
@@ -280,7 +289,7 @@ def get_policy(kind: str, name: str) -> Policy:
     try:
         return _REGISTRY[kind][name]()
     except KeyError:
-        raise ValueError(
+        raise UnknownPolicyError(
             f"unknown {kind} policy {name!r}; registered: "
             f"{', '.join(sorted(_REGISTRY[kind]))}") from None
 
@@ -340,7 +349,7 @@ def resolve_mechanism(name: str, queue_policy: str = "EASY") -> PolicyBundle:
             return PolicyBundle(notice=_REGISTRY["notice"][n_name](),
                                 arrival=arrival, queue=queue,
                                 elasticity=elasticity)
-    raise ValueError(
+    raise UnknownPolicyError(
         f"unknown mechanism {name!r}; registered mechanisms: "
         f"{', '.join(registered_mechanisms())}")
 

@@ -1,0 +1,8 @@
+"""Skip jax-dependent test modules when jax is unavailable (e.g. the
+lightweight CI container, which installs requirements-dev.txt only)."""
+
+collect_ignore = []
+try:
+    import jax  # noqa: F401
+except Exception:
+    collect_ignore = ["test_archs.py", "test_kernels.py", "test_runtime.py"]

@@ -5,6 +5,7 @@ tests/test_properties.py, which importorskips hypothesis so a checkout
 without the dev extras still collects and runs these deterministic tests.
 """
 import numpy as np
+import pytest
 
 from repro.core import JobType, NoticeKind, WorkloadConfig, generate
 
@@ -32,6 +33,7 @@ def test_offered_load_near_target():
 def test_int8_compression_error_feedback():
     """Quantize+error-feedback must be unbiased over steps: the residual
     carries, so the cumulative applied update converges to the true sum."""
+    pytest.importorskip("jax")
     from repro.training.train_step import _dequantize_int8, _quantize_int8
     rng = np.random.default_rng(0)
     g_true = rng.standard_normal((64, 64)).astype(np.float32)
