@@ -3,6 +3,7 @@
   baseline     -> Table II   (FCFS/EASY, no special treatment)
   mechanisms   -> Figure 6   (6 mechanisms x W1-W5 notice mixes)
   checkpoint   -> Figure 7   (rigid checkpoint frequency sweep)
+  scenarios    -> registry-named scenario presets x mechanisms
   dispatch     -> policy-API overhead vs the pre-refactor seed
 
 Each returns a list of row dicts; run.py prints them and asserts the
@@ -22,7 +23,7 @@ from typing import List, Optional, Tuple
 import numpy as np
 
 from repro.core import (MECHANISMS, NOTICE_MIXES, Experiment, SimConfig,
-                        Simulator, WorkloadConfig, generate)
+                        Simulator, WorkloadConfig, generate, get_scenario)
 
 N_NODES = 4392  # Theta
 
@@ -85,6 +86,34 @@ def bench_checkpoint(seeds=(0, 1), factors=(0.5, 1.0, 2.0),
     for row in rows:
         f = row["ckpt_freq_factor"]
         row.update(name=f"ckpt_{f:g}x/{row['mechanism']}", factor=f)
+    return rows
+
+
+def bench_scenarios(seeds=(0, 1), n_jobs=600,
+                    scenario_names=("W1", "W5", "bursty-od", "diurnal"),
+                    mechanisms=("BASE", "CUA&SPAA", "CUA&STEAL"),
+                    swf_trace: Optional[str] = None) -> List[dict]:
+    """Registry-named scenario presets x mechanisms (docs/workloads.md).
+
+    Beyond-the-paper coverage: the Figure 6 grid only varies notice
+    mixes; this sweep adds the stress presets (injected od bursts,
+    diurnal arrival modulation) and, when ``swf_trace`` is given, SWF
+    trace replay through the same mechanism set."""
+    workloads = [get_scenario(name, n_nodes=N_NODES, n_jobs=n_jobs,
+                              horizon_days=21.0, target_load=1.15)
+                 for name in scenario_names]
+    if swf_trace is not None:
+        workloads.append(get_scenario("trace-replay", trace=swf_trace))
+    rows = []
+    for wl in workloads:
+        for mech in mechanisms:
+            t0 = time.perf_counter()
+            res = Experiment(mechanisms=(mech,), workloads=(wl,),
+                             seeds=seeds).run()
+            row = res.mean(("mechanism", "scenario"))[0]
+            row.update(name=f"{mech}/{row['scenario']}",
+                       seconds=time.perf_counter() - t0)
+            rows.append(row)
     return rows
 
 

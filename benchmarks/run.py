@@ -8,6 +8,7 @@ writes the full row dicts to results/bench/*.json.  Sections:
   table2      baseline FCFS/EASY                    (paper Table II)
   fig6        6 mechanisms x W1-W5                  (paper Figure 6)
   fig7        checkpoint frequency sweep            (paper Figure 7)
+  scenarios   scenario presets x mechanisms         (docs/workloads.md)
   obs10       decision latency                      (paper Obs 10)
   dispatch    policy-API overhead vs seed           (BENCH_scheduler.json)
   roofline    per (arch x shape) roofline terms     (EXPERIMENTS §Roofline)
@@ -105,6 +106,14 @@ def main(argv=None) -> int:
         rows = bench_scheduler.bench_checkpoint(
             seeds=seeds[:2], n_jobs=n_jobs)
         _emit("fig7", rows, t0, dict(prov, seeds=list(seeds[:2])))
+    if want("scenarios"):
+        t0 = time.perf_counter()
+        trace = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "tests", "data", "sample.swf")
+        rows = bench_scheduler.bench_scenarios(
+            seeds=seeds[:2], n_jobs=n_jobs,
+            swf_trace=trace if os.path.exists(trace) else None)
+        _emit("scenarios", rows, t0, dict(prov, seeds=list(seeds[:2])))
     if want("obs10"):
         t0 = time.perf_counter()
         rows = bench_decision.bench_decision_kernels()

@@ -2,16 +2,18 @@
 
     PYTHONPATH=src python examples/mechanism_sweep.py [--jobs 400]
     PYTHONPATH=src python examples/mechanism_sweep.py --mechanisms 'BASE,CUA&STEAL'
+    PYTHONPATH=src python examples/mechanism_sweep.py --scenarios 'W1,W5,bursty-od'
 
 Runs through repro.core.experiment.Experiment (process fan-out), so the
 third-party STEAL/POOL policies from the Wagomu port sweep alongside the
-paper's six mechanisms.
+paper's six mechanisms.  With --scenarios, the sweep spans registry-named
+scenario presets (see docs/workloads.md) instead of one WorkloadConfig.
 """
 import argparse
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core import MECHANISMS, Experiment, WorkloadConfig
+from repro.core import MECHANISMS, Experiment, WorkloadConfig, get_scenario
 
 DEFAULT_MECHS = ("BASE",) + MECHANISMS + ("CUA&STEAL", "CUA&POOL")
 
@@ -23,20 +25,45 @@ def main():
     ap.add_argument("--mix", default="W5")
     ap.add_argument("--mechanisms", default=",".join(DEFAULT_MECHS),
                     help="comma-separated registered mechanism strings")
+    ap.add_argument("--scenarios", default=None,
+                    help="comma-separated scenario preset names to sweep "
+                         "instead of a single synthetic trace")
+    ap.add_argument("--trace", default=os.path.join(
+                        os.path.dirname(__file__), "..", "tests", "data",
+                        "sample.swf"),
+                    help="SWF file for the trace-replay preset")
     ap.add_argument("--serial", action="store_true",
                     help="disable the multiprocessing fan-out")
     args = ap.parse_args()
-    cfg = WorkloadConfig(n_nodes=4392, n_jobs=args.jobs, horizon_days=21.0,
-                         target_load=1.15, notice_mix=args.mix)
-    exp = Experiment(mechanisms=args.mechanisms.split(","), workloads=(cfg,),
+    if args.scenarios:
+        def preset(name):
+            if name == "trace-replay":  # the only preset needing a file
+                return get_scenario(name, trace=args.trace)
+            sc = get_scenario(name)
+            if sc.source != "theta":
+                return sc  # non-theta preset: its factory owns the params
+            return get_scenario(name, n_nodes=4392, n_jobs=args.jobs,
+                                horizon_days=21.0, target_load=1.15)
+        workloads = [preset(name) for name in args.scenarios.split(",")]
+        label = f"scenarios={args.scenarios}"
+    else:
+        workloads = [WorkloadConfig(n_nodes=4392, n_jobs=args.jobs,
+                                    horizon_days=21.0, target_load=1.15,
+                                    notice_mix=args.mix)]
+        label = f"mix={args.mix}"
+    exp = Experiment(mechanisms=args.mechanisms.split(","),
+                     workloads=workloads,
                      seeds=(args.seed,), processes=1 if args.serial else None)
     result = exp.run()
-    hdr = (f"{'mechanism':10s} {'turn_h':>7s} {'rigid_h':>8s} {'mall_h':>7s} "
+    hdr = (f"{'mechanism':10s} {'workload':>12s} {'turn_h':>7s} "
+           f"{'rigid_h':>8s} {'mall_h':>7s} "
            f"{'util':>6s} {'instant':>8s} {'pre_r':>6s} {'pre_m':>6s}")
-    print(f"trace: {args.jobs} jobs, mix={args.mix}\n{hdr}")
+    print(f"trace: {args.jobs} jobs, {label}\n{hdr}")
     for run in result:
         m = run.metrics
-        print(f"{run.spec.mechanism:10s} {m.avg_turnaround_h:7.1f} "
+        wl = run.spec.workload
+        wname = wl.label if hasattr(wl, "label") else wl.notice_mix
+        print(f"{run.spec.mechanism:10s} {wname:>12s} {m.avg_turnaround_h:7.1f} "
               f"{m.avg_turnaround_rigid_h:8.1f} "
               f"{m.avg_turnaround_malleable_h:7.1f} "
               f"{m.system_utilization:6.3f} {m.od_instant_start_rate:8.2f} "

@@ -5,8 +5,10 @@ Layered architecture::
     job / cluster / decision     job model, node ledger, vectorized kernels
     policy + policies/           pluggable scheduling policies + registry
     simulator                    event loop + mechanics (leases, lifecycle)
-    workload / metrics           trace synthesis and evaluation
-    experiment                   mechanisms x workloads x seeds sweeps
+    workloads/                   pluggable workload sources, SWF replay,
+                                 scenario transforms + registry
+    metrics                      evaluation metrics
+    experiment                   mechanisms x scenarios x seeds sweeps
 
 Public API:
     JobSpec / JobType / NoticeKind   job model (paper §III-A)
@@ -18,6 +20,11 @@ Public API:
                                      the string-keyed policy registry
     Experiment / ExperimentResult    sweep runner with process fan-out
     WorkloadConfig / generate        Theta-like trace synthesis (§IV-A)
+    WorkloadSource / ScenarioTransform / Scenario
+                                     workload protocols (repro.core.workloads)
+    register_source / register_transform / get_scenario
+                                     the string-keyed workload registry
+    SwfTrace                         SWF trace replay with annotation
     Metrics / collect                evaluation metrics (§IV-D)
     run_mechanism                    one-call simulation entry point
 
@@ -25,6 +32,12 @@ A mechanism string is "<notice>&<arrival>" over registered policy names
 ("CUA&SPAA", "CUA&STEAL", ...) or an explicitly registered composite
 ("BASE").  See docs/policies.md for writing and registering custom
 policies — new strategies plug in without touching the simulator.
+
+A workload cell is a WorkloadConfig, a Scenario (registered source +
+params + transform stack), or a preset name ("W1".."W5", "bursty-od",
+"diurnal", "trace-replay").  See docs/workloads.md for writing and
+registering custom sources — new workloads plug in without touching the
+generator.
 """
 from .job import JobSpec, JobType, NoticeKind, RunState
 from .cluster import Lease, NodeLedger
@@ -37,7 +50,14 @@ from .policy import (ARRIVAL_POLICIES, MECHANISMS, NOTICE_POLICIES,
                      register_mechanism, registered_mechanisms,
                      registered_policies, resolve_mechanism)
 from .simulator import JobRecord, SimConfig, Simulator
-from .workload import NOTICE_MIXES, WorkloadConfig, daly_interval, generate
+from .workloads import (NOTICE_MIXES, Scenario, ScenarioTransform,
+                        SwfTrace, ThetaGenerator, UnknownWorkloadError,
+                        WorkloadConfig, WorkloadDataError, WorkloadSource,
+                        daly_interval, generate, get_scenario, get_source,
+                        get_transform, notice_mix, register_scenario,
+                        register_source, register_transform,
+                        registered_scenarios, registered_sources,
+                        registered_transforms)
 from .metrics import Metrics, collect
 from .experiment import Experiment, ExperimentResult, RunResult, RunSpec
 
@@ -61,6 +81,12 @@ __all__ = [
     "UnknownPolicyError",
     "JobRecord", "SimConfig", "Simulator",
     "NOTICE_MIXES", "WorkloadConfig", "daly_interval", "generate",
+    "notice_mix",
+    "WorkloadSource", "ScenarioTransform", "Scenario", "SwfTrace",
+    "ThetaGenerator", "UnknownWorkloadError", "WorkloadDataError",
+    "get_source", "get_transform", "get_scenario",
+    "register_source", "register_transform", "register_scenario",
+    "registered_sources", "registered_transforms", "registered_scenarios",
     "Metrics", "collect", "run_mechanism",
     "Experiment", "ExperimentResult", "RunResult", "RunSpec",
 ]

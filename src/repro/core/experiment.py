@@ -12,7 +12,17 @@ benchmarks/bench_scheduler.py and examples/mechanism_sweep.py::
     for row in result.mean(("mechanism", "notice_mix")):
         print(row["mechanism"], row["avg_turnaround_h"])
 
-Each run replaces the workload's seed, generates the trace, simulates one
+A workload cell is a legacy :class:`WorkloadConfig`, a
+:class:`~repro.core.workloads.Scenario` (registry source + params +
+transform stack), or a preset name string resolved through the scenario
+registry — so sweeps span mechanisms x scenarios x seeds::
+
+    Experiment(mechanisms=("BASE", "CUA&SPAA"),
+               workloads=("W2", "bursty-od",
+                          Scenario("swf", params={"path": "trace.swf"})),
+               seeds=range(3))
+
+Each run replaces the workload's seed, builds the trace, simulates one
 mechanism, and collects :class:`Metrics`.  Fan-out uses a process pool
 (simulations are CPU-bound pure Python); environments that forbid
 subprocesses fall back to serial execution transparently.
@@ -21,14 +31,19 @@ from __future__ import annotations
 
 import os
 from dataclasses import dataclass, field, fields as dataclass_fields, replace
-from typing import Dict, Iterator, List, Mapping, Optional, Sequence, Tuple
+from typing import Dict, Iterator, List, Mapping, Optional, Sequence, Tuple, \
+    Union
 
 import numpy as np
 
 from .metrics import Metrics, collect
 from .policy import UnknownPolicyError, resolve_mechanism
 from .simulator import SimConfig, Simulator
-from .workload import WorkloadConfig, generate
+from .workloads import Scenario, UnknownWorkloadError, WorkloadConfig, \
+    generate, get_scenario, notice_mix
+
+#: what Experiment accepts per workload cell
+WorkloadLike = Union[WorkloadConfig, Scenario, str]
 
 
 @dataclass(frozen=True)
@@ -36,16 +51,24 @@ class RunSpec:
     """One (mechanism, workload, seed) cell of the sweep grid."""
 
     mechanism: str
-    workload: WorkloadConfig
+    workload: Union[WorkloadConfig, Scenario]
     seed: int
     sim_kw: Tuple[Tuple[str, object], ...] = ()  # frozen SimConfig overrides
 
     def key(self, names: Sequence[str]) -> tuple:
-        """Group key: each name is a RunSpec field or a workload field."""
+        """Group key: each name is a RunSpec field, a workload field, or —
+        for Scenario cells — "scenario" / a source param name."""
         out = []
         for n in names:
             if hasattr(self, n):
                 out.append(getattr(self, n))
+            elif isinstance(self.workload, Scenario):
+                if n == "scenario":
+                    out.append(self.workload.label)
+                else:
+                    out.append(self.workload.params.get(n))
+            elif n == "scenario":
+                out.append(None)  # legacy WorkloadConfig cell
             else:
                 out.append(getattr(self.workload, n))
         return tuple(out)
@@ -59,9 +82,14 @@ class RunResult:
 
 def _execute(spec: RunSpec) -> RunResult:
     """Top-level so process pools can pickle it."""
-    wcfg = replace(spec.workload, seed=spec.seed)
-    jobs = generate(wcfg)
-    cfg = SimConfig(n_nodes=wcfg.n_nodes, mechanism=spec.mechanism,
+    wl = spec.workload
+    if isinstance(wl, Scenario):
+        jobs, n_nodes = wl.realize(seed=spec.seed)
+    else:
+        wcfg = replace(wl, seed=spec.seed)
+        jobs = generate(wcfg)
+        n_nodes = wcfg.n_nodes
+    cfg = SimConfig(n_nodes=n_nodes, mechanism=spec.mechanism,
                     **dict(spec.sim_kw))
     sim = Simulator(cfg, jobs)
     sim.run()
@@ -73,7 +101,7 @@ class Experiment:
     """A mechanisms x workloads x seeds sweep."""
 
     mechanisms: Sequence[str]
-    workloads: Sequence[WorkloadConfig]
+    workloads: Sequence[WorkloadLike]
     seeds: Sequence[int] = (0,)
     sim_kw: Mapping[str, object] = field(default_factory=dict)
     #: None -> one process per CPU (capped at the number of runs);
@@ -83,6 +111,8 @@ class Experiment:
     def specs(self) -> Iterator[RunSpec]:
         frozen_kw = tuple(sorted(self.sim_kw.items()))
         for wl in self.workloads:
+            if isinstance(wl, str):  # preset name -> Scenario
+                wl = get_scenario(wl)
             for mech in self.mechanisms:
                 for seed in self.seeds:
                     yield RunSpec(mech, wl, seed, frozen_kw)
@@ -93,7 +123,14 @@ class Experiment:
         queue_policy = dict(self.sim_kw).get("queue_policy", "EASY")
         for mech in dict.fromkeys(self.mechanisms):
             resolve_mechanism(mech, queue_policy)
-        specs = list(self.specs())
+        specs = list(self.specs())  # also resolves preset-name workloads
+        for spec in specs:
+            if isinstance(spec.workload, Scenario):
+                spec.workload.validate()
+            else:
+                # a bad mix raised in a worker would read as a registry
+                # miss below and trigger a pointless serial re-run
+                notice_mix(spec.workload.notice_mix)
         n = self.processes
         if n is None:
             n = min(len(specs), os.cpu_count() or 1)
@@ -106,11 +143,11 @@ class Experiment:
             except (ImportError, NotImplementedError, OSError,
                     PermissionError, BrokenProcessPool):
                 pass  # no usable subprocess support: degrade to serial
-            except UnknownPolicyError:
-                # the mechanisms resolved in-process above, so a registry
-                # miss can only be spawn-start workers lacking the
-                # parent-registered custom policies: degrade to serial.
-                # Genuine simulation errors propagate
+            except (UnknownPolicyError, UnknownWorkloadError):
+                # mechanisms and scenarios resolved in-process above, so a
+                # registry miss can only be spawn-start workers lacking
+                # the parent-registered custom policies/sources: degrade
+                # to serial.  Genuine simulation errors propagate
                 pass
         return ExperimentResult([_execute(s) for s in specs])
 
@@ -128,24 +165,34 @@ class ExperimentResult:
         return len(self.runs)
 
     def rows(self) -> List[dict]:
-        """One flat dict per run: mechanism/seed/notice_mix plus every
-        workload field that varies across the sweep, then the metrics."""
+        """One flat dict per run: mechanism/seed plus, for legacy
+        WorkloadConfig cells, notice_mix and every workload field that
+        varies across the sweep; Scenario cells emit their preset label
+        as "scenario" (plus notice_mix when it is a source param).  The
+        metrics follow."""
         varying: List[str] = []
-        if self.runs:
-            wls = [r.spec.workload for r in self.runs]
-            for f in dataclass_fields(wls[0]):
+        wcs = [r.spec.workload for r in self.runs
+               if isinstance(r.spec.workload, WorkloadConfig)]
+        if wcs:
+            for f in dataclass_fields(wcs[0]):
                 if f.name == "notice_mix":
                     continue  # always emitted
                 if f.name == "seed":
                     continue  # template seed is replaced by RunSpec.seed
-                if len({getattr(w, f.name) for w in wls}) > 1:
+                if len({getattr(w, f.name) for w in wcs}) > 1:
                     varying.append(f.name)
         out = []
         for r in self.runs:
-            row = {"mechanism": r.spec.mechanism, "seed": r.spec.seed,
-                   "notice_mix": r.spec.workload.notice_mix}
-            for name in varying:
-                row[name] = getattr(r.spec.workload, name)
+            row = {"mechanism": r.spec.mechanism, "seed": r.spec.seed}
+            wl = r.spec.workload
+            if isinstance(wl, WorkloadConfig):
+                row["notice_mix"] = wl.notice_mix
+                for name in varying:
+                    row[name] = getattr(wl, name)
+            else:
+                row["scenario"] = wl.label
+                if "notice_mix" in wl.params:
+                    row["notice_mix"] = wl.params["notice_mix"]
             row.update(r.metrics.as_dict())
             out.append(row)
         return out

@@ -36,6 +36,14 @@ def _avg_turnaround(recs: List[JobRecord]) -> float:
 
 def collect(sim: Simulator) -> Metrics:
     recs = list(sim.records.values())
+    if not recs:
+        # an empty trace (e.g. an over-filtered scenario) has no horizon:
+        # every averaged metric is NaN rather than a min()-over-empty crash
+        nan = float("nan")
+        dec = (float(np.percentile(np.array(sim.decision_times) * 1e3, 99))
+               if sim.decision_times else None)
+        return Metrics(nan, nan, nan, nan, nan, nan, nan, nan, nan,
+                       n_completed=0, n_jobs=0, decision_p99_ms=dec)
     by_type = {t: [r for r in recs if r.job.jtype is t] for t in JobType}
     od = by_type[JobType.ONDEMAND]
     rigid = by_type[JobType.RIGID]

@@ -1,179 +1,15 @@
-"""Theta-like workload synthesis (paper §IV-A, §IV-B).
+"""Backward-compat shim: the workload layer is now the
+``repro.core.workloads`` package (sources, transforms, scenarios behind a
+registry — see docs/workloads.md).  Every name that used to live here
+re-exports unchanged; ``generate(cfg)`` still reproduces the pre-split
+traces bit-for-bit (golden-tested)."""
+from .workloads.synthetic import (NOTICE_KINDS, NOTICE_MIXES, SIZE_BUCKETS,
+                                  SIZE_WEIGHTS, ThetaGenerator,
+                                  WorkloadConfig, daly_interval, generate,
+                                  notice_mix)
 
-The real one-year Theta trace is not redistributable, so we synthesize
-traces that match its published characterization: 4392 nodes, job sizes
-dominated by the 128-1024 range (Fig. 3), lognormal runtimes, overestimated
-walltimes, project-grouped submissions, and *bursty* on-demand arrivals
-(projects submit several on-demand jobs within a short window, Fig. 5).
-
-Job types are assigned per-project (paper default: 10% of projects submit
-on-demand jobs, 60% rigid, 30% malleable); on-demand jobs larger than half
-the system are reassigned to rigid/malleable (paper §IV-A).
-
-W1-W5 advance-notice mixes (paper Table III) control the split of
-on-demand jobs across {no notice, accurate, early, late}.
-"""
-from __future__ import annotations
-
-import math
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
-
-import numpy as np
-
-from .job import JobSpec, JobType, NoticeKind
-
-# paper Table III
-NOTICE_MIXES: Dict[str, List[float]] = {
-    "W1": [0.70, 0.10, 0.10, 0.10],
-    "W2": [0.10, 0.70, 0.10, 0.10],
-    "W3": [0.10, 0.10, 0.70, 0.10],
-    "W4": [0.10, 0.10, 0.10, 0.70],
-    "W5": [0.25, 0.25, 0.25, 0.25],
-}
-NOTICE_KINDS = [NoticeKind.NONE, NoticeKind.ACCURATE,
-                NoticeKind.EARLY, NoticeKind.LATE]
-
-# Theta/ALCF-flavored size mix (paper Fig. 3): most jobs 128-1024 nodes.
-SIZE_BUCKETS = [(128, 256), (257, 512), (513, 1024), (1025, 2048), (2049, 4096)]
-SIZE_WEIGHTS = [0.46, 0.26, 0.16, 0.08, 0.04]
-
-
-@dataclass
-class WorkloadConfig:
-    n_nodes: int = 4392
-    n_jobs: int = 1500
-    horizon_days: float = 14.0
-    target_load: float = 1.05          # offered load vs capacity
-    n_projects: int = 60
-    frac_od_projects: float = 0.10     # paper §IV-B
-    frac_rigid_projects: float = 0.60
-    notice_mix: str = "W5"
-    # on-demand burstiness (paper Fig. 5)
-    od_burst_size: tuple = (2, 8)
-    od_burst_window: float = 1800.0
-    # runtime model
-    runtime_median_s: float = 7200.0
-    runtime_sigma: float = 1.1
-    runtime_max_s: float = 86400.0
-    runtime_min_s: float = 600.0
-    estimate_factor: tuple = (1.0, 3.0)
-    # overheads (paper §IV-B)
-    rigid_setup_frac: tuple = (0.05, 0.10)
-    malleable_setup_frac: tuple = (0.0, 0.05)
-    malleable_min_frac: float = 0.20
-    ckpt_overhead_small: float = 600.0   # < 1K nodes
-    ckpt_overhead_large: float = 1200.0  # >= 1K nodes
-    ckpt_freq_factor: float = 1.0        # 0.5 = twice as frequent as Daly
-    node_mtbf_hours: float = 20000.0     # per-node MTBF for the Daly interval
-    notice_lead: tuple = (900.0, 1800.0)  # 15-30 min
-    late_window: float = 1800.0
-    seed: int = 0
-
-
-def daly_interval(delta: float, mtbf_job: float) -> float:
-    """Daly's first-order optimal checkpoint interval."""
-    if not math.isfinite(mtbf_job):
-        return math.inf
-    return max(math.sqrt(2.0 * delta * mtbf_job) - delta, delta)
-
-
-def generate(cfg: WorkloadConfig) -> List[JobSpec]:
-    rng = np.random.default_rng(cfg.seed)
-    horizon = cfg.horizon_days * 86400.0
-
-    # ---- project pool with Zipf-ish activity ------------------------------
-    n_proj = cfg.n_projects
-    proj_w = 1.0 / np.arange(1, n_proj + 1) ** 0.8
-    proj_w /= proj_w.sum()
-    proj_type = np.array([JobType.ONDEMAND] * round(n_proj * cfg.frac_od_projects)
-                         + [JobType.RIGID] * round(n_proj * cfg.frac_rigid_projects),
-                         dtype=object)
-    proj_type = np.concatenate(
-        [proj_type, np.array([JobType.MALLEABLE] * (n_proj - len(proj_type)),
-                             dtype=object)])
-    rng.shuffle(proj_type)
-
-    # ---- raw jobs ----------------------------------------------------------
-    projects = rng.choice(n_proj, size=cfg.n_jobs, p=proj_w)
-    buckets = rng.choice(len(SIZE_BUCKETS), size=cfg.n_jobs, p=SIZE_WEIGHTS)
-    lo = np.array([SIZE_BUCKETS[b][0] for b in buckets])
-    hi = np.array([SIZE_BUCKETS[b][1] for b in buckets])
-    sizes = np.exp(rng.uniform(np.log(lo), np.log(hi))).astype(int)
-    sizes = np.clip(sizes, 1, cfg.n_nodes)
-    runtimes = np.exp(rng.normal(np.log(cfg.runtime_median_s), cfg.runtime_sigma,
-                                 cfg.n_jobs))
-    runtimes = np.clip(runtimes, cfg.runtime_min_s, cfg.runtime_max_s)
-
-    # scale arrivals so offered load ~= target_load of capacity
-    total_work = float((sizes * runtimes).sum())
-    span = total_work / (cfg.n_nodes * cfg.target_load)
-    span = min(span, horizon)
-    arrivals = np.sort(rng.uniform(0.0, span, cfg.n_jobs))
-
-    jobs: List[JobSpec] = []
-    mix = NOTICE_MIXES[cfg.notice_mix]
-    od_members: Dict[int, List[int]] = {}
-    for i in range(cfg.n_jobs):
-        p = int(projects[i])
-        jt: JobType = proj_type[p]
-        size, t_act = int(sizes[i]), float(runtimes[i])
-        if jt is JobType.ONDEMAND and size > cfg.n_nodes // 2:
-            jt = JobType.RIGID if rng.random() < 0.5 else JobType.MALLEABLE
-        t_est = float(t_act * rng.uniform(*cfg.estimate_factor))
-        t_est = min(t_est, cfg.runtime_max_s * 3)
-        if jt is JobType.RIGID:
-            setup = float(t_act * rng.uniform(*cfg.rigid_setup_frac))
-            delta = (cfg.ckpt_overhead_small if size < 1000
-                     else cfg.ckpt_overhead_large)
-            mtbf_job = cfg.node_mtbf_hours * 3600.0 / size
-            tau = daly_interval(delta, mtbf_job) * cfg.ckpt_freq_factor
-            jobs.append(JobSpec(i, jt, f"proj{p}", float(arrivals[i]), size,
-                                t_est, t_act, t_setup=setup,
-                                ckpt_overhead=delta, ckpt_interval=tau))
-        elif jt is JobType.MALLEABLE:
-            setup = float(t_act * rng.uniform(*cfg.malleable_setup_frac))
-            jobs.append(JobSpec(i, jt, f"proj{p}", float(arrivals[i]), size,
-                                t_est, t_act, t_setup=setup,
-                                n_min=max(1, math.ceil(cfg.malleable_min_frac * size))))
-        else:
-            setup = float(t_act * rng.uniform(*cfg.rigid_setup_frac))
-            jobs.append(JobSpec(i, jt, f"proj{p}", float(arrivals[i]), size,
-                                t_est, t_act, t_setup=setup))
-            od_members.setdefault(p, []).append(len(jobs) - 1)
-
-    # ---- bursty on-demand arrivals + notice kinds (Table III) --------------
-    for p, idxs in od_members.items():
-        k = 0
-        while k < len(idxs):
-            burst = int(rng.integers(*cfg.od_burst_size))
-            anchor = jobs[idxs[k]].submit_time
-            for j in idxs[k:k + burst]:
-                jobs[j].submit_time = float(
-                    anchor + rng.uniform(0.0, cfg.od_burst_window))
-            k += burst
-    od_jobs = [j for j in jobs if j.jtype is JobType.ONDEMAND]
-    kinds = rng.choice(4, size=len(od_jobs), p=mix)
-    for j, kidx in zip(od_jobs, kinds):
-        kind = NOTICE_KINDS[int(kidx)]
-        j.notice_kind = kind
-        if kind is NoticeKind.NONE:
-            continue
-        lead = float(rng.uniform(*cfg.notice_lead))
-        arrival = j.submit_time
-        if kind is NoticeKind.ACCURATE:
-            j.notice_time = arrival - lead
-            j.est_arrival = arrival
-        elif kind is NoticeKind.EARLY:
-            # actual arrival uniform in (notice, est_arrival)
-            j.notice_time = arrival - float(rng.uniform(0.0, lead))
-            j.est_arrival = j.notice_time + lead
-        else:  # LATE: arrival within 30 min after estimate
-            j.est_arrival = arrival - float(rng.uniform(0.0, cfg.late_window))
-            j.notice_time = j.est_arrival - lead
-        j.notice_time = max(j.notice_time, 0.0)
-
-    jobs.sort(key=lambda j: j.submit_time)
-    for new_id, j in enumerate(jobs):
-        j.jid = new_id
-    return jobs
+__all__ = [
+    "NOTICE_KINDS", "NOTICE_MIXES", "SIZE_BUCKETS", "SIZE_WEIGHTS",
+    "ThetaGenerator", "WorkloadConfig", "daly_interval", "generate",
+    "notice_mix",
+]

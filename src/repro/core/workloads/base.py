@@ -1,0 +1,257 @@
+"""Composable workload API: sources, transforms, scenarios (paper §IV-A).
+
+PR 1 made scheduling *policies* pluggable; this package does the same for
+the other evaluation axis — workload composition.  Three small protocols
+mirror the policy architecture (`repro.core.policy`):
+
+    WorkloadSource     produces a job trace (a list of JobSpec).  Built-in
+                       sources: "theta" (the decomposed synthetic Theta-like
+                       generator, repro.core.workloads.synthetic) and "swf"
+                       (Standard Workload Format trace replay with
+                       job-type/malleability annotation,
+                       repro.core.workloads.swf).
+    ScenarioTransform  rewrites a trace: load scaling, burst injection,
+                       diurnal modulation, notice-mix override, type-mix
+                       reassignment (repro.core.workloads.transforms).
+                       Transforms stack on any source.
+    Scenario           a picklable recipe: source name + params + a stack
+                       of (transform name, params) — the unit Experiment
+                       sweeps alongside mechanisms and seeds.
+
+Both sources and transforms live in string-keyed registries so new
+workloads are *data* (registry entries) rather than forks of the
+generator, exactly like scheduling policies::
+
+    from repro.core.workloads import WorkloadSource, register_source
+
+    @register_source("replay_csv")
+    class CsvReplay(WorkloadSource):
+        def __init__(self, path, n_nodes=4392, seed=0):
+            self.path, self.n_nodes, self.seed = path, n_nodes, seed
+
+        def jobs(self):
+            return [make_jobspec(row) for row in read_csv(self.path)]
+
+    # Scenario("replay_csv", params={"path": "trace.csv"}) now works
+    # everywhere — Experiment, benchmarks, examples.
+
+Named presets (paper W1-W5, bursty-OD stress, trace replay) are plain
+Scenario factories registered in repro.core.workloads.presets; Experiment
+accepts the preset name string directly.
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, field, replace
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..job import JobSpec
+
+
+class UnknownWorkloadError(ValueError):
+    """A workload source, transform, scenario, or notice-mix name that is
+    not in its registry.  ValueError subclass for backward compatibility,
+    in the style of :class:`repro.core.policy.UnknownPolicyError`;
+    Experiment relies on the distinct type to tell registry misses in
+    spawn-start workers apart from genuine simulation errors."""
+
+
+class WorkloadDataError(ValueError):
+    """A workload source's input data is unusable (corrupt trace line, no
+    usable jobs, ...).  Deliberately NOT an UnknownWorkloadError: registry
+    misses make Experiment retry the sweep serially (spawn-start workers
+    may lack parent-registered classes), while data errors are
+    deterministic and must propagate immediately."""
+
+
+# ------------------------------------------------------------------ protocols
+class WorkloadSource:
+    """Produces one job trace.
+
+    Contract:
+      * the constructor accepts registry params as keyword arguments and
+        MUST accept a ``seed`` keyword (Experiment re-seeds each run);
+      * ``jobs()`` returns a canonical trace — submit-time sorted with
+        contiguous jids starting at 0 (use :func:`canonicalize`);
+      * ``n_nodes`` is the system size the trace targets (SimConfig uses
+        it when a Scenario does not override it).
+    """
+
+    name: str = "?"
+    n_nodes: int = 0
+
+    def jobs(self) -> List[JobSpec]:
+        raise NotImplementedError
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"<{type(self).__name__} source:{self.name}>"
+
+
+class ScenarioTransform:
+    """Rewrites a job trace; stateless apart from constructor params.
+
+    ``apply`` receives the trace, a numpy Generator (seeded per run by
+    :meth:`Scenario.realize`), and the system size the trace targets —
+    so transforms can honor size invariants like the paper's half-system
+    on-demand cap — and returns the transformed trace; it may mutate and
+    return the input list.  Scenario.realize re-canonicalizes after the
+    whole stack, so transforms may leave arrivals unsorted or jids stale
+    (new jobs use ``jid=-1``)."""
+
+    name: str = "?"
+
+    def apply(self, jobs: List[JobSpec], rng: np.random.Generator,
+              n_nodes: int) -> List[JobSpec]:
+        raise NotImplementedError
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"<{type(self).__name__} transform:{self.name}>"
+
+
+def canonicalize(jobs: List[JobSpec]) -> List[JobSpec]:
+    """Sort by submit time and renumber jids contiguously from 0 (the
+    trace invariant every source and Scenario.realize guarantee)."""
+    jobs.sort(key=lambda j: j.submit_time)
+    for new_id, j in enumerate(jobs):
+        j.jid = new_id
+    return jobs
+
+
+# ------------------------------------------------------------------ registries
+_SOURCES: Dict[str, type] = {}
+_TRANSFORMS: Dict[str, type] = {}
+
+
+def register_source(name: str) -> Callable[[type], type]:
+    """Class decorator: ``@register_source("swf")``."""
+    def deco(cls: type) -> type:
+        cls.name = name
+        _SOURCES[name] = cls
+        return cls
+    return deco
+
+
+def register_transform(name: str) -> Callable[[type], type]:
+    """Class decorator: ``@register_transform("load_scale")``."""
+    def deco(cls: type) -> type:
+        cls.name = name
+        _TRANSFORMS[name] = cls
+        return cls
+    return deco
+
+
+def get_source(name: str, **params) -> WorkloadSource:
+    """Instantiate a registered workload source by name."""
+    _ensure_builtins()
+    try:
+        cls = _SOURCES[name]
+    except KeyError:
+        raise UnknownWorkloadError(
+            f"unknown workload source {name!r}; registered: "
+            f"{', '.join(sorted(_SOURCES))}") from None
+    return cls(**params)
+
+
+def get_transform(name: str, **params) -> ScenarioTransform:
+    """Instantiate a registered scenario transform by name."""
+    _ensure_builtins()
+    try:
+        cls = _TRANSFORMS[name]
+    except KeyError:
+        raise UnknownWorkloadError(
+            f"unknown scenario transform {name!r}; registered: "
+            f"{', '.join(sorted(_TRANSFORMS))}") from None
+    return cls(**params)
+
+
+def registered_sources() -> Tuple[str, ...]:
+    _ensure_builtins()
+    return tuple(sorted(_SOURCES))
+
+
+def registered_transforms() -> Tuple[str, ...]:
+    _ensure_builtins()
+    return tuple(sorted(_TRANSFORMS))
+
+
+# ------------------------------------------------------------------- scenario
+@dataclass
+class Scenario:
+    """A picklable workload recipe: source + params + transform stack.
+
+    Experiment treats a Scenario exactly like a legacy WorkloadConfig cell:
+    one Scenario x mechanism x seed per run, with ``seed`` replaced by the
+    RunSpec seed (the template seed is a default for direct use).
+
+        Scenario("swf", params={"path": "theta.swf"},
+                 transforms=[("load_scale", {"factor": 1.3})])
+    """
+
+    source: str
+    params: Dict[str, object] = field(default_factory=dict)
+    transforms: Sequence[Tuple[str, Dict[str, object]]] = ()
+    #: preset label for reporting (ExperimentResult.rows "scenario" column)
+    name: Optional[str] = None
+    seed: int = 0
+    #: system-size override: forwarded to the source as its ``n_nodes``
+    #: param (winning over ``params``) so trace clipping and the
+    #: on-demand size cap match the simulated machine
+    n_nodes: Optional[int] = None
+
+    @property
+    def label(self) -> str:
+        return self.name or self.source
+
+    def with_seed(self, seed: int) -> "Scenario":
+        return replace(self, seed=seed)
+
+    def validate(self) -> None:
+        """Fail fast — without building the trace — on errors that would
+        otherwise surface in pool workers, where Experiment either
+        misreads them as spawn registry misses or pays a full serial
+        re-run before they propagate: unregistered source/transform
+        names (UnknownWorkloadError), unknown notice mixes, and missing
+        trace files (WorkloadDataError)."""
+        _ensure_builtins()
+        if self.source not in _SOURCES:
+            get_source(self.source)  # raises with the registry listing
+        for tname, _ in self.transforms:
+            if tname not in _TRANSFORMS:
+                get_transform(tname)  # raises with the registry listing
+        from .synthetic import notice_mix
+        param_sets = [self.params] + [p for _, p in self.transforms]
+        for params in param_sets:
+            for key in ("notice_mix", "mix"):
+                if params.get(key) is not None:
+                    notice_mix(params[key])
+            path = params.get("path")
+            if path is not None and not os.path.exists(path):
+                raise WorkloadDataError(
+                    f"scenario {self.label!r}: trace file not found: {path}")
+
+    def realize(self, seed: Optional[int] = None
+                ) -> Tuple[List[JobSpec], int]:
+        """Build the trace: instantiate the source (re-seeded), run the
+        transform stack, canonicalize.  Returns ``(jobs, n_nodes)``."""
+        if seed is None:
+            seed = self.seed
+        params = {k: v for k, v in self.params.items() if k != "seed"}
+        if self.n_nodes is not None:
+            params["n_nodes"] = self.n_nodes
+        src = get_source(self.source, seed=seed, **params)
+        jobs = src.jobs()
+        n_nodes = src.n_nodes
+        # one transform-stack stream, decorrelated from the source's seed
+        rng = np.random.default_rng([seed, 0x5CEA])
+        for tname, tparams in self.transforms:
+            jobs = get_transform(tname, **tparams).apply(jobs, rng, n_nodes)
+        return canonicalize(jobs), n_nodes
+
+
+def _ensure_builtins() -> None:
+    """Import the builtin source/transform modules exactly once
+    (registration side effect); deferred to avoid a circular import at
+    module load, mirroring repro.core.policy._ensure_builtins."""
+    from . import swf, synthetic, transforms  # noqa: F401

@@ -1,0 +1,410 @@
+"""Composable workload API: registries, invariants, transforms, sweeps.
+
+The shared trace invariants (sorted arrivals, contiguous jids, on-demand
+size cap, notice geometry) run against BOTH the synthetic generator and
+the SWF trace reader; source-specific checks (offered load vs
+target_load, Table III proportions) follow.
+"""
+import dataclasses
+import math
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (Experiment, JobType, NoticeKind, Scenario,
+                        UnknownWorkloadError, WorkloadConfig,
+                        WorkloadDataError, collect, generate, get_scenario,
+                        get_source, get_transform, notice_mix,
+                        registered_scenarios, registered_sources,
+                        registered_transforms, register_source, SimConfig,
+                        Simulator, SwfTrace, WorkloadSource)
+from repro.core.workloads import canonicalize
+from repro.core.workloads.swf import parse_swf
+
+SAMPLE_SWF = os.path.join(os.path.dirname(__file__), "data", "sample.swf")
+SMALL = dict(n_jobs=120, n_nodes=512, n_projects=12, horizon_days=4.0)
+
+
+def assert_trace_invariants(jobs, n_nodes):
+    """The invariants every source and scenario must satisfy."""
+    assert jobs, "empty trace"
+    assert [j.jid for j in jobs] == list(range(len(jobs)))  # contiguous jids
+    assert all(a.submit_time <= b.submit_time
+               for a, b in zip(jobs, jobs[1:]))             # sorted arrivals
+    for j in jobs:
+        assert 1 <= j.size <= n_nodes
+        assert j.t_actual > 0
+        assert j.t_actual <= j.t_estimate + 1e-6
+        if j.jtype is JobType.MALLEABLE:
+            assert 1 <= j.n_min <= j.size
+        if j.jtype is JobType.ONDEMAND:
+            assert j.size <= n_nodes // 2                   # od size cap
+            if j.notice_kind is not NoticeKind.NONE:
+                assert j.notice_time is not None
+                assert j.est_arrival is not None
+                assert j.notice_time <= j.submit_time
+                if j.notice_kind is NoticeKind.LATE:
+                    assert j.submit_time >= j.est_arrival - 1e-6
+                if j.notice_kind is NoticeKind.EARLY:
+                    assert j.submit_time <= j.est_arrival + 1e-6
+
+
+def _generator_jobs():
+    cfg = WorkloadConfig(seed=3, **SMALL)
+    return generate(cfg), cfg.n_nodes
+
+
+def _swf_jobs():
+    src = SwfTrace(SAMPLE_SWF, seed=3, frac_od_projects=0.3)
+    return src.jobs(), src.n_nodes
+
+
+@pytest.mark.parametrize("build", [_generator_jobs, _swf_jobs],
+                         ids=["theta", "swf"])
+def test_trace_invariants_both_sources(build):
+    jobs, n_nodes = build()
+    assert_trace_invariants(jobs, n_nodes)
+
+
+@pytest.mark.parametrize("build", [_generator_jobs, _swf_jobs],
+                         ids=["theta", "swf"])
+def test_sources_are_deterministic_per_seed(build):
+    a, _ = build()
+    b, _ = build()
+    assert [dataclasses.asdict(x) for x in a] == \
+           [dataclasses.asdict(x) for x in b]
+
+
+def test_offered_load_within_tolerance_of_target():
+    cfg = WorkloadConfig(n_jobs=1500, n_nodes=4392, seed=0, target_load=1.15,
+                         horizon_days=60.0)  # horizon must not clip the span
+    jobs = generate(cfg)
+    span = max(j.submit_time for j in jobs) - min(j.submit_time for j in jobs)
+    work = sum(j.t_actual * j.size for j in jobs)
+    load = work / (span * cfg.n_nodes)
+    assert abs(load - cfg.target_load) / cfg.target_load < 0.35
+
+
+@pytest.mark.parametrize("mix", ["W1", "W2", "W5"])
+def test_table3_notice_mix_proportions_generator(mix):
+    cfg = WorkloadConfig(n_jobs=3000, n_nodes=2048, seed=3, notice_mix=mix,
+                         frac_od_projects=0.5, frac_rigid_projects=0.3)
+    jobs = generate(cfg)
+    od = [j for j in jobs if j.jtype is JobType.ONDEMAND]
+    assert len(od) > 300
+    target = dict(zip([NoticeKind.NONE, NoticeKind.ACCURATE,
+                       NoticeKind.EARLY, NoticeKind.LATE], notice_mix(mix)))
+    for kind, frac in target.items():
+        got = np.mean([j.notice_kind is kind for j in od])
+        assert abs(got - frac) < 0.10, (mix, kind, got)
+
+
+def test_table3_notice_mix_proportions_swf():
+    src = SwfTrace(SAMPLE_SWF, seed=1, frac_od_projects=1.0,
+                   frac_rigid_projects=0.0, notice_mix="W2")
+    od = [j for j in src.jobs() if j.jtype is JobType.ONDEMAND]
+    assert len(od) > 40
+    frac_acc = np.mean([j.notice_kind is NoticeKind.ACCURATE for j in od])
+    assert 0.5 < frac_acc < 0.9  # W2: 70% accurate notice
+
+
+# ------------------------------------------------------------------ legacy
+def test_scenario_theta_matches_legacy_generate_bit_for_bit():
+    cfg_kw = dict(seed=11, notice_mix="W3", **SMALL)
+    legacy = generate(WorkloadConfig(**cfg_kw))
+    via_api, n_nodes = Scenario("theta", params=dict(cfg_kw)).realize(seed=11)
+    assert n_nodes == SMALL["n_nodes"]
+    assert [dataclasses.asdict(j) for j in legacy] == \
+           [dataclasses.asdict(j) for j in via_api]
+
+
+def test_legacy_workload_module_still_imports():
+    from repro.core import workload as legacy
+    assert legacy.WorkloadConfig is WorkloadConfig
+    assert legacy.generate is generate
+    assert legacy.notice_mix is notice_mix
+
+
+# ---------------------------------------------------------------- registries
+def test_builtin_sources_transforms_scenarios_registered():
+    assert {"theta", "swf"} <= set(registered_sources())
+    assert {"load_scale", "burst_inject", "diurnal", "notice_mix",
+            "type_mix"} <= set(registered_transforms())
+    assert {"W1", "W2", "W3", "W4", "W5", "bursty-od", "diurnal",
+            "trace-replay"} <= set(registered_scenarios())
+
+
+def test_unknown_names_raise_listing_registry():
+    with pytest.raises(UnknownWorkloadError) as ei:
+        get_source("NOPE")
+    assert "theta" in str(ei.value) and "swf" in str(ei.value)
+    with pytest.raises(UnknownWorkloadError) as ei:
+        get_transform("NOPE")
+    assert "load_scale" in str(ei.value)
+    with pytest.raises(UnknownWorkloadError) as ei:
+        get_scenario("NOPE")
+    assert "bursty-od" in str(ei.value)
+    with pytest.raises(UnknownWorkloadError) as ei:
+        generate(WorkloadConfig(notice_mix="W9", n_jobs=10))
+    msg = str(ei.value)
+    assert "W9" in msg
+    for valid in ("W1", "W2", "W3", "W4", "W5"):
+        assert valid in msg
+    assert isinstance(ei.value, ValueError)  # backward compatible
+
+
+def test_scenario_validate_fails_fast_without_building():
+    with pytest.raises(UnknownWorkloadError):
+        Scenario("no_such_source").validate()
+    with pytest.raises(UnknownWorkloadError):
+        Scenario("theta", transforms=(("no_such_transform", {}),)).validate()
+    # worker-deterministic errors must be caught before process fan-out:
+    # a bad mix or a missing trace would otherwise cost a serial re-run
+    with pytest.raises(UnknownWorkloadError):
+        Scenario("theta", params={"notice_mix": "W9"}).validate()
+    with pytest.raises(UnknownWorkloadError):
+        Scenario("theta",
+                 transforms=(("notice_mix", {"mix": "W9"}),)).validate()
+    with pytest.raises(WorkloadDataError, match="not found"):
+        Scenario("swf", params={"path": "/no/such/file.swf"}).validate()
+    Scenario("theta", transforms=(("load_scale", {"factor": 2.0}),)).validate()
+    Scenario("swf", params={"path": SAMPLE_SWF}).validate()
+
+
+def test_register_custom_source_end_to_end():
+    name = "_TEST_TWO_JOBS"
+    if name not in registered_sources():
+        @register_source(name)
+        class TwoJobs(WorkloadSource):
+            def __init__(self, n_nodes=64, seed=0):
+                self.n_nodes, self.seed = n_nodes, seed
+
+            def jobs(self):
+                from repro.core import JobSpec
+                return canonicalize([
+                    JobSpec(-1, JobType.RIGID, "p", 50.0, 32, 2000.0, 1000.0),
+                    JobSpec(-1, JobType.RIGID, "p", 0.0, 32, 2000.0, 1000.0)])
+
+    res = Experiment(mechanisms=("BASE",),
+                     workloads=(Scenario(name, name="twojobs"),),
+                     seeds=(0,), processes=1).run()
+    assert res.runs[0].metrics.n_jobs == 2
+    assert res.runs[0].metrics.n_completed == 2
+
+
+# ---------------------------------------------------------------- transforms
+def _theta_small(seed=0, **kw):
+    return generate(WorkloadConfig(seed=seed, **{**SMALL, **kw}))
+
+
+def test_load_scale_compresses_span():
+    rng = np.random.default_rng(0)
+    base = _theta_small()
+    span0 = max(j.submit_time for j in base) - min(j.submit_time for j in base)
+    scaled = get_transform("load_scale", factor=2.0).apply(
+        _theta_small(), rng, SMALL["n_nodes"])
+    span1 = max(j.submit_time for j in scaled) - min(j.submit_time
+                                                     for j in scaled)
+    assert span1 == pytest.approx(span0 / 2.0)
+    assert_trace_invariants(canonicalize(scaled), SMALL["n_nodes"])
+
+
+def test_burst_inject_adds_od_jobs_and_keeps_invariants():
+    sc = Scenario("theta", params=dict(seed=0, **SMALL),
+                  transforms=(("burst_inject",
+                               {"n_bursts": 3, "burst_size": (4, 6),
+                                "size": (32, 128), "mix": "W5"}),))
+    jobs, n_nodes = sc.realize(seed=0)
+    base = _theta_small()
+    extra = [j for j in jobs if j.project.startswith("odburst")]
+    assert len(jobs) == len(base) + len(extra)
+    assert 12 <= len(extra) <= 18
+    assert all(j.jtype is JobType.ONDEMAND for j in extra)
+    assert_trace_invariants(jobs, n_nodes)
+
+
+def test_burst_inject_respects_od_cap_on_small_systems():
+    # the preset draws sizes up to 256; on a 200-node machine the
+    # injected on-demand jobs must still respect the half-system cap
+    sc = Scenario("theta", params=dict(seed=0, n_jobs=60, n_nodes=200,
+                                       n_projects=8, horizon_days=4.0),
+                  transforms=(("burst_inject",
+                               {"n_bursts": 3, "burst_size": (4, 6),
+                                "size": (64, 256)}),))
+    jobs, n_nodes = sc.realize(seed=0)
+    assert n_nodes == 200
+    assert_trace_invariants(jobs, n_nodes)
+
+
+def test_diurnal_modulation_concentrates_arrivals():
+    sc = Scenario("theta", params=dict(seed=0, **SMALL),
+                  transforms=(("diurnal", {"amplitude": 0.9}),))
+    jobs, n_nodes = sc.realize(seed=0)
+    base = _theta_small()
+    assert len(jobs) == len(base)
+    assert_trace_invariants(jobs, n_nodes)
+    # same span endpoints, but arrivals pile up around the daily peak:
+    # the dispersion of time-of-day phases must shrink vs the flat trace
+    def phase_concentration(js):
+        ph = np.array([j.submit_time for j in js]) * (2 * np.pi / 86400.0)
+        return np.hypot(np.mean(np.cos(ph)), np.mean(np.sin(ph)))
+    assert phase_concentration(jobs) > phase_concentration(base) + 0.1
+
+
+def test_notice_mix_override_rewrites_proportions():
+    base = _theta_small(frac_od_projects=0.5, frac_rigid_projects=0.3,
+                        n_jobs=2000, notice_mix="W1")
+    rng = np.random.default_rng(0)
+    jobs = get_transform("notice_mix", mix="W2").apply(base, rng,
+                                                       SMALL["n_nodes"])
+    od = [j for j in jobs if j.jtype is JobType.ONDEMAND]
+    frac_acc = np.mean([j.notice_kind is NoticeKind.ACCURATE for j in od])
+    assert 0.6 < frac_acc < 0.8  # was 10% under W1, now 70%
+    assert_trace_invariants(canonicalize(jobs), SMALL["n_nodes"])
+
+
+def test_type_mix_reassigns_types_per_project():
+    n_nodes = SMALL["n_nodes"]
+    base = _theta_small(n_jobs=2000)
+    rng = np.random.default_rng(0)
+    jobs = get_transform("type_mix", frac_od=0.0, frac_rigid=1.0).apply(
+        base, rng, n_nodes)
+    assert all(j.jtype is JobType.RIGID for j in jobs)
+    # promoted rigids get the generator's Daly checkpoint model, not an
+    # infinite interval that would forfeit all work on preemption
+    assert all(math.isfinite(j.ckpt_interval) and j.ckpt_overhead > 0
+               for j in jobs)
+    # per-project assignment: with a cap no job exceeds, every project is
+    # single-typed (the paper's per-project rule)
+    jobs = get_transform("type_mix", frac_od=0.3, frac_rigid=0.3,
+                         od_max_size=n_nodes).apply(jobs, rng, n_nodes)
+    types = {t: sum(j.jtype is t for j in jobs) for t in JobType}
+    assert all(v > 0 for v in types.values())
+    for p in {j.project for j in jobs}:
+        assert len({j.jtype for j in jobs if j.project == p}) == 1
+    # default cap = half the system: oversized ods bounce to rigid/malleable
+    jobs = get_transform("type_mix", frac_od=1.0, frac_rigid=0.0).apply(
+        jobs, rng, n_nodes)
+    assert all(j.size <= n_nodes // 2
+               for j in jobs if j.jtype is JobType.ONDEMAND)
+    assert any(j.jtype is not JobType.ONDEMAND for j in jobs)  # bounced
+    assert_trace_invariants(canonicalize(jobs), n_nodes)
+
+
+def test_transform_param_validation():
+    with pytest.raises(ValueError):
+        get_transform("load_scale", factor=0.0)
+    with pytest.raises(ValueError):
+        get_transform("diurnal", amplitude=1.5)
+    with pytest.raises(ValueError):
+        get_transform("type_mix", frac_od=0.8, frac_rigid=0.8)
+
+
+# ----------------------------------------------------------------------- swf
+def test_parse_swf_header_and_filtering():
+    records, header = parse_swf(SAMPLE_SWF)
+    assert header["MaxNodes"] == "512"
+    assert len(records) == 82  # raw lines, incl. cancelled + unsized
+    src = SwfTrace(SAMPLE_SWF, seed=0)
+    jobs = src.jobs()
+    assert src.n_nodes == 512  # from the MaxNodes directive
+    assert len(jobs) == 80     # cancelled (status 5) + unsized dropped
+    assert min(j.submit_time for j in jobs) == 0.0  # normalized to t=0
+    for j in jobs:
+        assert j.t_estimate >= j.t_actual  # kill limit never truncates
+        if j.jtype is JobType.RIGID:
+            # generator-consistent Daly model: preemption must not
+            # forfeit all completed work
+            assert math.isfinite(j.ckpt_interval) and j.ckpt_overhead > 0
+
+
+def test_swf_n_nodes_override_and_unknown_mix():
+    src = SwfTrace(SAMPLE_SWF, n_nodes=256, seed=0)
+    assert src.n_nodes == 256
+    assert all(j.size <= 256 for j in src.jobs())
+    with pytest.raises(UnknownWorkloadError):
+        SwfTrace(SAMPLE_SWF, notice_mix="W0").jobs()
+
+
+def test_corrupt_swf_raises_data_error_not_registry_error(tmp_path):
+    bad = tmp_path / "bad.swf"
+    bad.write_text("; MaxNodes: 64\n1 0 0 100 8 x y z\n")
+    with pytest.raises(WorkloadDataError, match="unparseable"):
+        SwfTrace(str(bad))
+    # data errors must NOT look like registry misses: Experiment retries
+    # those serially, which would re-run entire sweeps for a bad trace
+    assert not isinstance(WorkloadDataError("x"), UnknownWorkloadError)
+    empty = tmp_path / "empty.swf"
+    empty.write_text("; MaxNodes: 64\n1 0 0 -1 0 -1 -1 0 -1 -1 0 1 1\n")
+    with pytest.raises(WorkloadDataError, match="no usable jobs"):
+        SwfTrace(str(empty)).jobs()
+
+
+def test_scenario_n_nodes_override_reaches_the_source():
+    # the override must reshape the trace (size clip + od cap), not just
+    # the SimConfig: jobs larger than the simulated machine can never run
+    jobs, n_nodes = Scenario("theta", params=dict(seed=0, **SMALL),
+                             n_nodes=200).realize(seed=0)
+    assert n_nodes == 200
+    assert_trace_invariants(jobs, 200)
+    jobs, n_nodes = Scenario("swf", params={"path": SAMPLE_SWF},
+                             n_nodes=128).realize(seed=0)
+    assert n_nodes == 128
+    assert all(j.size <= 128 for j in jobs)
+
+
+# ----------------------------------------------------------------- experiment
+def test_experiment_sweeps_named_scenarios_and_trace_replay():
+    """Acceptance: >= 3 registry-named scenarios (one SWF trace replay)
+    through >= 2 mechanisms end-to-end."""
+    small = dict(n_jobs=60, n_nodes=512, n_projects=12, horizon_days=4.0)
+    wls = [get_scenario("W2", **small),
+           get_scenario("bursty-od", **small),
+           get_scenario("trace-replay", trace=SAMPLE_SWF)]
+    res = Experiment(mechanisms=("BASE", "CUA&SPAA"), workloads=wls,
+                     seeds=(0,), processes=1).run()
+    assert len(res) == 6
+    for run in res:
+        assert run.metrics.n_completed == run.metrics.n_jobs > 0
+    rows = res.mean(("mechanism", "scenario"))
+    assert {r["scenario"] for r in rows} == {"W2", "bursty-od",
+                                             "trace-replay"}
+    for row in res.rows():
+        assert row["scenario"] in {"W2", "bursty-od", "trace-replay"}
+
+
+def test_experiment_accepts_preset_name_strings():
+    exp = Experiment(mechanisms=("BASE",), workloads=("W1", "diurnal"),
+                     seeds=(0,))
+    specs = list(exp.specs())
+    assert [s.workload.label for s in specs] == ["W1", "diurnal"]
+    assert all(isinstance(s.workload, Scenario) for s in specs)
+    with pytest.raises(UnknownWorkloadError):
+        list(Experiment(mechanisms=("BASE",), workloads=("NOPE",),
+                        seeds=(0,)).specs())
+
+
+def test_experiment_seed_replaces_scenario_template_seed():
+    sc = get_scenario("trace-replay", trace=SAMPLE_SWF)
+    res = Experiment(mechanisms=("BASE",), workloads=(sc,), seeds=(0, 1),
+                     processes=1).run()
+    a, b = res.runs
+    assert a.spec.seed == 0 and b.spec.seed == 1
+    # same trace, different annotation draws -> od sets differ
+    ja, _ = sc.realize(seed=0)
+    jb, _ = sc.realize(seed=1)
+    kinds_a = [j.jtype for j in ja]
+    kinds_b = [j.jtype for j in jb]
+    assert kinds_a != kinds_b
+
+
+# -------------------------------------------------------------------- metrics
+def test_collect_handles_empty_record_set():
+    sim = Simulator(SimConfig(n_nodes=8, mechanism="BASE"), [])
+    sim.run()
+    m = collect(sim)
+    assert m.n_jobs == 0 and m.n_completed == 0
+    assert math.isnan(m.avg_turnaround_h)
+    assert math.isnan(m.system_utilization)
+    assert math.isnan(m.od_instant_start_rate)
