@@ -1,8 +1,9 @@
 """Obs 10: scheduler decisions must be fast (paper: < 10 ms, ours: us).
 
-Times the two decision kernels at full-system scale (Theta: 4392 nodes,
-hundreds of running jobs) and the end-to-end arrival handling inside a
-live simulation.
+Times the decision kernels at full-system scale (Theta: 4392 nodes,
+hundreds of running jobs) — including the incremental engine's EASY
+shadow-window and backfill-prefilter kernels at 50k-job-trace queue
+depths — and the end-to-end arrival handling inside a live simulation.
 """
 from __future__ import annotations
 
@@ -11,7 +12,8 @@ import time
 import numpy as np
 
 from repro.core import (SimConfig, Simulator, WorkloadConfig,
-                        apportion_shrink, generate,
+                        apportion_shrink, backfill_prefilter,
+                        backfill_shadow_filter, easy_shadow, generate,
                         select_preemption_victims)
 
 DECISION_BOUND_US = 10_000.0  # paper Obs 10: every decision under 10 ms
@@ -20,16 +22,32 @@ E2E_SEEDS = (0, 1, 2)
 E2E_N_JOBS = 600
 
 
-def bench_decision_kernels(n_running=500, reps=200) -> list:
+def bench_decision_kernels(n_running=500, queue_depth=100, reps=200) -> list:
+    """Synthetic-kernel latencies.  ``n_running`` is deliberately ~10x a
+    Theta steady state (so the shadow kernel row bounds a 50k-job trace's
+    worst running set); ``queue_depth`` is the backfill window the
+    prefilter scans per event regardless of total queue length."""
     rng = np.random.default_rng(0)
     sizes = rng.integers(64, 2048, n_running)
     overheads = rng.uniform(0, 1e6, n_running)
     cur = rng.integers(64, 2048, n_running)
     mn = np.maximum(cur // 5, 1)
+    est_bases = rng.uniform(0.0, 1e6, n_running)
+    needs = rng.integers(1, 4096, queue_depth).astype(np.float64)
+    ests = rng.uniform(600.0, 86400.0, queue_depth)
+    cand = np.arange(queue_depth)
     rows = []
-    for name, fn in [
-        ("paa_select", lambda: select_preemption_victims(sizes, overheads, 3000)),
-        ("spaa_apportion", lambda: apportion_shrink(cur, mn, 3000)),
+    for name, scale, fn in [
+        ("paa_select", f"n_running={n_running}",
+         lambda: select_preemption_victims(sizes, overheads, 3000)),
+        ("spaa_apportion", f"n_running={n_running}",
+         lambda: apportion_shrink(cur, mn, 3000)),
+        ("easy_shadow", f"n_running={n_running}",
+         lambda: easy_shadow(64, 3000, est_bases, sizes, 5e5)),
+        ("backfill_prefilter", f"queue_depth={queue_depth}",
+         lambda: backfill_prefilter(needs, 512.0)),
+        ("backfill_shadow_filter", f"queue_depth={queue_depth}",
+         lambda: backfill_shadow_filter(needs, ests, cand, 64, 5e5, 5e5 + 7200.0)),
     ]:
         fn()  # warm
         t0 = time.perf_counter()
@@ -37,7 +55,7 @@ def bench_decision_kernels(n_running=500, reps=200) -> list:
             fn()
         us = (time.perf_counter() - t0) / reps * 1e6
         rows.append({"name": name, "us_per_call": round(us, 1),
-                     "derived": f"n_running={n_running}"})
+                     "derived": scale})
     return rows
 
 

@@ -5,6 +5,8 @@
   checkpoint   -> Figure 7   (rigid checkpoint frequency sweep)
   scenarios    -> registry-named scenario presets x mechanisms
   dispatch     -> policy-API overhead vs the pre-refactor seed
+  scale        -> incremental-engine wall clock 600 -> 6k -> 50k jobs,
+                  paired against the pre-PR O(n log n)-per-event engine
 
 Each returns a list of row dicts; run.py prints them and asserts the
 paper's qualitative observations (Obs 1-13) where they are trace-robust.
@@ -12,10 +14,14 @@ All sweeps run through repro.core.experiment.Experiment (process fan-out).
 """
 from __future__ import annotations
 
+import hashlib
+import io
 import json
 import os
 import subprocess
 import sys
+import tarfile
+import tempfile
 import time
 import types
 from typing import List, Optional, Tuple
@@ -27,13 +33,20 @@ from repro.core import (MECHANISMS, NOTICE_MIXES, Experiment, SimConfig,
 
 N_NODES = 4392  # Theta
 
-# Last commit with the monolithic pre-refactor Simulator.  Its support
-# modules (cluster/decision/job) are unchanged since, so the old class can
-# run against the current package and the baseline is measured on the same
-# machine as the refactored simulator (needs full git history; shallow
-# clones fall back to reporting absolute cost only).
+# Last commit with the monolithic pre-refactor Simulator; the dispatch
+# bench re-measures it on this machine by loading that commit's whole
+# module set (simulator + its support modules) out of git history, so
+# later additive changes to the current support modules cannot skew or
+# disable the comparison (needs full git history; shallow clones fall
+# back to reporting absolute cost only).
 PRE_REFACTOR_COMMIT = "5189395"
 DISPATCH_BUDGET = 1.05  # refactor may cost at most 5%
+
+# Last commit before the incremental O(log n) engine (per-event full
+# queue re-sort, O(n) membership ops, Python shadow loop); bench_scale
+# pairs against it for the speedup claim in BENCH_scheduler.json.
+PRE_ENGINE_COMMIT = "0c1e348"
+SCALE_SPEEDUP_TARGET = 10.0  # acceptance: >= 10x on the 6k month-dense run
 
 
 def _wl(seed: int, mix: str = "W5", n_jobs: int = 600,
@@ -117,42 +130,82 @@ def bench_scenarios(seeds=(0, 1), n_jobs=600,
     return rows
 
 
-def _load_seed_simulator() -> Optional[Tuple[type, type]]:
-    """Load the pre-refactor monolithic Simulator out of git history.
+def _repo_root() -> str:
+    return os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
-    Returns (Simulator, SimConfig) from PRE_REFACTOR_COMMIT, executed as a
-    synthetic ``repro.core`` submodule so its relative imports resolve
-    against the (unchanged) current cluster/decision/job modules, or None
-    when git/history is unavailable (e.g. shallow CI clone) or when those
-    support modules have since diverged from the baseline commit — in
-    which case old-loop + new-kernels would no longer measure the
-    policy-API refactor."""
-    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-    support = [f"src/repro/core/{m}.py"
-               for m in ("cluster", "decision", "job")]
+
+def _load_commit_core(commit: str,
+                      modules: Tuple[str, ...]) -> Optional[types.ModuleType]:
+    """Materialize ``src/repro/core/<m>.py`` files of a past commit as a
+    synthetic package ``repro.core._hist_<commit>`` (exec'd in dependency
+    order so relative imports resolve against the *old* siblings, and the
+    old module set is self-consistent — old JobType enums compare ``is``
+    against old-generated jobs).  Returns the package or None when git
+    history is unavailable (e.g. shallow CI clone)."""
+    pkg_name = f"repro.core._hist_{commit}"
+    pkg = sys.modules.get(pkg_name)
+    if pkg is not None:
+        return pkg
+    sources = {}
     try:
-        unchanged = subprocess.run(
-            ["git", "diff", "--quiet", PRE_REFACTOR_COMMIT, "--", *support],
-            cwd=root, capture_output=True, timeout=30).returncode == 0
-        if not unchanged:
-            return None
-        src = subprocess.run(
-            ["git", "show", f"{PRE_REFACTOR_COMMIT}:src/repro/core/simulator.py"],
-            cwd=root, capture_output=True, text=True, check=True,
-            timeout=30).stdout
+        for m in modules:
+            sources[m] = subprocess.run(
+                ["git", "show", f"{commit}:src/repro/core/{m}.py"],
+                cwd=_repo_root(), capture_output=True, text=True, check=True,
+                timeout=30).stdout
     except (OSError, subprocess.SubprocessError):
         return None
-    mod = types.ModuleType("repro.core._seed_simulator")
-    mod.__package__ = "repro.core"
-    # dataclass creation resolves cls.__module__ through sys.modules
-    sys.modules[mod.__name__] = mod
+    pkg = types.ModuleType(pkg_name)
+    pkg.__path__ = []  # mark as package so relative imports resolve
+    sys.modules[pkg_name] = pkg
     try:
-        exec(compile(src, f"<simulator.py@{PRE_REFACTOR_COMMIT}>", "exec"),
-             mod.__dict__)
+        for m in modules:
+            mod = types.ModuleType(f"{pkg_name}.{m}")
+            mod.__package__ = pkg_name
+            # dataclass creation resolves cls.__module__ through sys.modules
+            sys.modules[mod.__name__] = mod
+            exec(compile(sources[m], f"<{m}.py@{commit}>", "exec"),
+                 mod.__dict__)
+            setattr(pkg, m, mod)
     except Exception:
-        del sys.modules[mod.__name__]
+        for m in modules:
+            sys.modules.pop(f"{pkg_name}.{m}", None)
+        del sys.modules[pkg_name]
         return None
-    return mod.Simulator, mod.SimConfig
+    return pkg
+
+
+def _jobs_fingerprint(jobs) -> list:
+    """Field-level trace identity across module generations (enum values
+    compared by .value: old and new JobType/NoticeKind are distinct enum
+    classes)."""
+    return [(j.jid, j.jtype.value, j.project, j.submit_time, j.size,
+             j.t_estimate, j.t_actual, j.t_setup, j.n_min,
+             j.notice_kind.value, j.notice_time, j.est_arrival,
+             j.ckpt_overhead, j.ckpt_interval) for j in jobs]
+
+
+def _load_seed_simulator(n_jobs: int = 600) -> Optional[Tuple[type, type, list]]:
+    """The pre-refactor monolithic engine, self-consistently loaded from
+    PRE_REFACTOR_COMMIT (simulator + cluster/decision/job/workload).
+
+    Returns (Simulator, SimConfig, seed-generated n_jobs trace) or None
+    when history is unavailable or the old generator no longer produces
+    the bit-identical trace the current one does — in which case the
+    paired comparison would no longer measure engine overhead alone."""
+    pkg = _load_commit_core(
+        PRE_REFACTOR_COMMIT,
+        ("job", "cluster", "decision", "workload", "simulator"))
+    if pkg is None:
+        return None
+    old_cfg = pkg.workload.WorkloadConfig(
+        n_nodes=N_NODES, n_jobs=n_jobs, horizon_days=21.0, target_load=1.15,
+        notice_mix="W5", seed=0, ckpt_freq_factor=1.0)
+    old_jobs = pkg.workload.generate(old_cfg)
+    if _jobs_fingerprint(old_jobs) != \
+            _jobs_fingerprint(generate(_wl(0, n_jobs=n_jobs))):
+        return None  # generators diverged; paired timing would be bogus
+    return pkg.simulator.Simulator, pkg.simulator.SimConfig, old_jobs
 
 
 def bench_policy_dispatch(n_jobs=600, reps=8, batch=3,
@@ -172,7 +225,7 @@ def bench_policy_dispatch(n_jobs=600, reps=8, batch=3,
     not — and the attempt count is recorded."""
     jobs = generate(_wl(0, n_jobs=n_jobs))
     cfg = SimConfig(n_nodes=N_NODES, mechanism="CUA&SPAA")
-    seed = _load_seed_simulator()
+    seed = _load_seed_simulator(n_jobs)
 
     def run_batch(make_sim) -> float:
         t0 = time.process_time()
@@ -182,9 +235,9 @@ def bench_policy_dispatch(n_jobs=600, reps=8, batch=3,
 
     cur_f = lambda: run_batch(lambda: Simulator(cfg, list(jobs)))
     if seed is not None:
-        seed_sim, seed_cfg_cls = seed
+        seed_sim, seed_cfg_cls, seed_jobs = seed
         seed_cfg = seed_cfg_cls(n_nodes=N_NODES, mechanism="CUA&SPAA")
-        seed_f = lambda: run_batch(lambda: seed_sim(seed_cfg, list(jobs)))
+        seed_f = lambda: run_batch(lambda: seed_sim(seed_cfg, list(seed_jobs)))
         seed_f()  # warm allocator/caches on both paths before timing
     t0 = time.perf_counter()
     Simulator(cfg, list(jobs)).run()
@@ -241,13 +294,166 @@ def bench_policy_dispatch(n_jobs=600, reps=8, batch=3,
             baseline_source=f"unavailable ({why})",
             derived=f"run={best * 1e6:.0f}us; seed baseline not measurable "
                     "on this checkout, overhead not reported")
-    try:
-        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-        with open(os.path.join(root, out_path), "w") as f:
-            json.dump(row, f, indent=1)
-    except OSError:  # read-only checkout: the printed row still reports it
-        pass
+    _merge_root_bench("dispatch", row, out_path)
     return row
+
+
+def _merge_root_bench(section: str, payload, out_path: str) -> None:
+    """Read-modify-write one section of the repo-root BENCH artifact
+    ({"dispatch": {...}, "scale": [...]}); a legacy single-row file is
+    folded into its "dispatch" section."""
+    path = os.path.join(_repo_root(), out_path)
+    data = {}
+    try:
+        with open(path) as f:
+            data = json.load(f)
+        if "name" in data:  # legacy layout: the bare dispatch row
+            data = {"dispatch": data}
+    except (OSError, ValueError):
+        data = {}
+    data[section] = payload
+    try:
+        with open(path, "w") as f:
+            json.dump(data, f, indent=1)
+    except OSError:  # read-only checkout: the printed rows still report it
+        pass
+
+
+# ---------------------------------------------------------------- scale
+def _record_digest(records) -> str:
+    """Order-independent digest of the job-for-job outcome of one run —
+    comparable across engine generations and processes."""
+    recs = sorted((r.job.jid, r.first_start, r.completion, r.killed,
+                   r.n_preempted, r.n_shrunk, r.instant)
+                  for r in records.values())
+    return hashlib.sha256(repr(recs).encode()).hexdigest()
+
+
+_PRE_ENGINE_SCRIPT = """\
+import json, sys, time
+import hashlib
+from repro.core import SimConfig, Simulator, WorkloadConfig, generate
+cfg = json.loads(sys.argv[1])
+wl = WorkloadConfig(n_nodes=cfg["n_nodes"], n_jobs=cfg["n_jobs"],
+                    horizon_days=cfg["horizon_days"], target_load=1.15,
+                    notice_mix="W5", seed=cfg["seed"])
+jobs = generate(wl)
+t0 = time.perf_counter()
+sim = Simulator(SimConfig(n_nodes=cfg["n_nodes"], mechanism=cfg["mechanism"]),
+                jobs)
+sim.run()
+seconds = time.perf_counter() - t0
+recs = sorted((r.job.jid, r.first_start, r.completion, r.killed,
+               r.n_preempted, r.n_shrunk, r.instant)
+              for r in sim.records.values())
+digest = hashlib.sha256(repr(recs).encode()).hexdigest()
+print(json.dumps({"seconds": seconds, "digest": digest}))
+"""
+
+
+def _pre_engine_run(n_jobs: int, horizon_days: float, seed: int,
+                    mechanism: str, commit: str = PRE_ENGINE_COMMIT,
+                    timeout: float = 3600.0) -> Optional[dict]:
+    """One run on the pre-PR engine: ``git archive`` the whole ``src``
+    tree of `commit` into a temp dir and execute there in a subprocess
+    (full module isolation — no enum-identity or shared-module hazards),
+    timing only the simulation.  Returns {"seconds", "digest"} or None
+    when history/subprocesses are unavailable."""
+    try:
+        tar_bytes = subprocess.run(
+            ["git", "archive", "--format=tar", commit, "src"],
+            cwd=_repo_root(), capture_output=True, check=True,
+            timeout=60).stdout
+    except (OSError, subprocess.SubprocessError):
+        return None
+    params = json.dumps({"n_nodes": N_NODES, "n_jobs": n_jobs,
+                         "horizon_days": horizon_days, "seed": seed,
+                         "mechanism": mechanism})
+    try:
+        with tempfile.TemporaryDirectory(prefix="pre_engine_") as tmp:
+            with tarfile.open(fileobj=io.BytesIO(tar_bytes)) as tf:
+                tf.extractall(tmp)
+            env = dict(os.environ,
+                       PYTHONPATH=os.path.join(tmp, "src"))
+            out = subprocess.run(
+                [sys.executable, "-c", _PRE_ENGINE_SCRIPT, params],
+                capture_output=True, text=True, check=True, env=env,
+                timeout=timeout)
+        return json.loads(out.stdout.strip().splitlines()[-1])
+    except (OSError, subprocess.SubprocessError, ValueError, IndexError):
+        return None
+
+
+def bench_scale(scales=((600, 21.0), (6000, 210.0), (6000, 30.0),
+                        (50000, 1750.0)),
+                mechanism="CUA&SPAA", seed=0, baseline_max_jobs=6000,
+                repeats=2, out_path="BENCH_scheduler.json") -> List[dict]:
+    """Incremental-engine wall clock across trace scales at Theta size.
+
+    ``scales`` holds (n_jobs, horizon_days) pairs: horizon growing with
+    n_jobs keeps offered load at the paper's 1.15, while the month-dense
+    pair (6k jobs / 30 days — the issue's "month-scale trace replay",
+    one month of Theta-rate submissions) drives the backlog into the
+    thousands, the regime where the pre-PR engine's per-event re-sorts
+    go quadratic.
+
+    Every run tracks decision times (p99 must stay under the paper's
+    10 ms Obs-10 bound at every scale) and, up to ``baseline_max_jobs``,
+    the same trace replays on the pre-PR engine (git archive of
+    PRE_ENGINE_COMMIT in a subprocess) for a paired wall-clock speedup
+    and a job-for-job record-digest identity check.  The rows land in
+    results/bench/scale.json and the "scale" section of
+    BENCH_scheduler.json.
+    """
+    rows = []
+    for n_jobs, horizon_days in scales:
+        wl = WorkloadConfig(n_nodes=N_NODES, n_jobs=n_jobs,
+                            horizon_days=horizon_days, target_load=1.15,
+                            notice_mix="W5", seed=seed)
+        jobs = generate(wl)
+        best, digest, p99_ms = float("inf"), "", None
+        for _ in range(repeats):
+            sim = Simulator(SimConfig(n_nodes=N_NODES, mechanism=mechanism,
+                                      track_decision_time=True), list(jobs))
+            t0 = time.perf_counter()
+            sim.run()
+            best = min(best, time.perf_counter() - t0)
+            digest = _record_digest(sim.records)
+            if sim.decision_times:
+                p99 = float(np.percentile(
+                    np.asarray(sim.decision_times) * 1e3, 99))
+                p99_ms = p99 if p99_ms is None else min(p99_ms, p99)
+        row = {"name": f"scale_{n_jobs}job_{horizon_days:g}d",
+               "n_jobs": n_jobs, "horizon_days": horizon_days,
+               "mechanism": mechanism, "seed": seed,
+               "seconds": round(best, 3),
+               "us_per_job": round(best / n_jobs * 1e6, 2),
+               "decision_p99_ms": None if p99_ms is None
+               else round(p99_ms, 3),
+               "decision_bound_ms": 10.0,
+               "decision_within_bound": bool(p99_ms is not None
+                                             and p99_ms <= 10.0)}
+        if n_jobs <= baseline_max_jobs:
+            base = _pre_engine_run(n_jobs, horizon_days, seed, mechanism)
+            if base is not None:
+                speedup = base["seconds"] / max(best, 1e-9)
+                row.update(
+                    baseline_source=f"measured@{PRE_ENGINE_COMMIT}",
+                    baseline_seconds=round(base["seconds"], 3),
+                    speedup=round(speedup, 2),
+                    records_match=bool(base["digest"] == digest))
+            else:
+                row["baseline_source"] = \
+                    "unavailable (no git history or no subprocesses)"
+        row["derived"] = (
+            f"{row['seconds']}s ({row['us_per_job']}us/job)"
+            + (f", {row['speedup']}x vs pre-engine"
+               if "speedup" in row else "")
+            + (f", p99={row['decision_p99_ms']}ms"
+               if row["decision_p99_ms"] is not None else ""))
+        rows.append(row)
+    _merge_root_bench("scale", rows, out_path)
+    return rows
 
 
 # ------------------------------------------------- qualitative validations

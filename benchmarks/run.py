@@ -11,7 +11,14 @@ writes the full row dicts to results/bench/*.json.  Sections:
   scenarios   scenario presets x mechanisms         (docs/workloads.md)
   obs10       decision latency                      (paper Obs 10)
   dispatch    policy-API overhead vs seed           (BENCH_scheduler.json)
+  scale       engine wall clock 600 -> 6k -> 50k    (results/bench/scale.json
+                                                     + BENCH_scheduler.json)
   roofline    per (arch x shape) roofline terms     (EXPERIMENTS §Roofline)
+
+Scale tiers: --quick runs (600, 2k) with the paired pre-PR baseline at
+600 jobs; the default adds the 6k steady-load and month-dense pairs
+(the latter gates the >= 10x speedup acceptance); --full adds the
+50k-job Theta-scale sweep.
 """
 from __future__ import annotations
 
@@ -141,6 +148,43 @@ def main(argv=None) -> int:
                     f"> budget {row['budget_pct']:.0f}%")
             print(f"VALIDATION-FAIL,{fail}", file=sys.stderr)
             failures.append(fail)
+    if want("scale"):
+        t0 = time.perf_counter()
+        if args.quick:
+            scales = ((600, 21.0), (2000, 70.0))
+            baseline_max = 600
+        elif args.full:
+            scales = ((600, 21.0), (6000, 210.0), (6000, 30.0),
+                      (50000, 1750.0))
+            baseline_max = 6000
+        else:
+            scales = ((600, 21.0), (6000, 210.0), (6000, 30.0))
+            baseline_max = 6000
+        rows = bench_scheduler.bench_scale(scales=scales,
+                                           baseline_max_jobs=baseline_max)
+        _emit("scale", rows, t0,
+              dict(prov, seeds=[0],
+                   note="n_jobs varies per row; see each row"))
+        for r in rows:
+            if r.get("records_match") is False:
+                fail = (f"scale: {r['name']} records diverge from the "
+                        f"pre-PR engine")
+                print(f"VALIDATION-FAIL,{fail}", file=sys.stderr)
+                failures.append(fail)
+            if r["decision_p99_ms"] is not None \
+                    and not r["decision_within_bound"]:
+                fail = (f"scale: {r['name']} decision p99 "
+                        f"{r['decision_p99_ms']}ms > 10ms bound")
+                print(f"VALIDATION-FAIL,{fail}", file=sys.stderr)
+                failures.append(fail)
+            # the acceptance gate: month-dense 6k replay >= 10x
+            if "speedup" in r and r["n_jobs"] >= 6000 \
+                    and r["horizon_days"] <= 31.0 \
+                    and r["speedup"] < bench_scheduler.SCALE_SPEEDUP_TARGET:
+                fail = (f"scale: {r['name']} speedup {r['speedup']}x < "
+                        f"{bench_scheduler.SCALE_SPEEDUP_TARGET}x target")
+                print(f"VALIDATION-FAIL,{fail}", file=sys.stderr)
+                failures.append(fail)
     if want("roofline"):
         t0 = time.perf_counter()
         rows = bench_roofline.rows(multi_pod=False)

@@ -41,8 +41,10 @@ generator.
 """
 from .job import JobSpec, JobType, NoticeKind, RunState
 from .cluster import Lease, NodeLedger
-from .decision import (apportion_shrink, expected_releases_before,
-                       select_preemption_victims)
+from .decision import (apportion_shrink, backfill_prefilter,
+                       backfill_shadow_filter, easy_shadow,
+                       expected_releases_before, select_preemption_victims)
+from .structures import OrderedSet, WaitQueue
 from .policy import (ARRIVAL_POLICIES, MECHANISMS, NOTICE_POLICIES,
                      ArrivalPolicy, ElasticityPolicy, NoticePolicy,
                      PolicyBundle, QueuePolicy, SchedulerOps, SchedulerView,
@@ -58,7 +60,7 @@ from .workloads import (NOTICE_MIXES, Scenario, ScenarioTransform,
                         register_source, register_transform,
                         registered_scenarios, registered_sources,
                         registered_transforms)
-from .metrics import Metrics, collect
+from .metrics import Metrics, collect, summarize_records
 from .experiment import Experiment, ExperimentResult, RunResult, RunSpec
 
 
@@ -72,7 +74,9 @@ def run_mechanism(mechanism: str, jobs, n_nodes: int, **cfg_kw) -> "Metrics":
 
 __all__ = [
     "JobSpec", "JobType", "NoticeKind", "RunState", "Lease", "NodeLedger",
-    "apportion_shrink", "expected_releases_before", "select_preemption_victims",
+    "apportion_shrink", "backfill_prefilter", "backfill_shadow_filter",
+    "easy_shadow", "expected_releases_before", "select_preemption_victims",
+    "OrderedSet", "WaitQueue",
     "MECHANISMS", "NOTICE_POLICIES", "ARRIVAL_POLICIES",
     "NoticePolicy", "ArrivalPolicy", "QueuePolicy", "ElasticityPolicy",
     "PolicyBundle", "SchedulerView", "SchedulerOps",
@@ -87,6 +91,6 @@ __all__ = [
     "get_source", "get_transform", "get_scenario",
     "register_source", "register_transform", "register_scenario",
     "registered_sources", "registered_transforms", "registered_scenarios",
-    "Metrics", "collect", "run_mechanism",
+    "Metrics", "collect", "summarize_records", "run_mechanism",
     "Experiment", "ExperimentResult", "RunResult", "RunSpec",
 ]

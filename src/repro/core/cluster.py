@@ -69,6 +69,17 @@ class NodeLedger:
     def hold_of(self, jid: int) -> int:
         return self.job_hold.get(jid, 0)
 
+    def hold_to_free(self, jid: int, k: int) -> None:
+        """Move k of jid's held nodes into the free pool (the queue-head
+        hold steal, paper deadlock resolution)."""
+        have = self.job_hold[jid]
+        assert 0 < k <= have
+        if k == have:
+            del self.job_hold[jid]
+        else:
+            self.job_hold[jid] = have - k
+        self.free += k
+
     # -- allocation ----------------------------------------------------------
     def allocate(self, size: int, *, from_free: int = 0, od: int = None,
                  from_reserved: int = 0, from_hold: int = 0,

@@ -1,11 +1,14 @@
 """Vectorized decision kernels (paper §II-C "quick decision making").
 
-The two hot decisions — PAA victim selection and SPAA shrink apportionment —
-are O(running jobs) numpy operations so a full-system decision stays well
-under the paper's 10 ms bound (Obs. 10); benchmarked in bench_decision.py.
+The hot decisions — PAA victim selection, SPAA shrink apportionment, the
+EASY shadow-window computation, and the backfill candidate prefilter —
+are O(running jobs) / O(queue window) numpy operations so a full-system
+decision stays well under the paper's 10 ms bound (Obs. 10) even on
+month-scale traces; benchmarked in bench_decision.py.
 """
 from __future__ import annotations
 
+import math
 from typing import List, Sequence, Tuple
 
 import numpy as np
@@ -68,6 +71,82 @@ def apportion_shrink(
         base[top] += 1
     assert int(base.sum()) == need and np.all(base <= slack)
     return [int(x) for x in base]
+
+
+def easy_shadow(
+    avail: int,
+    need: int,
+    est_end_bases: Sequence[float],
+    sizes: Sequence[int],
+    now: float,
+) -> Tuple[float, int]:
+    """EASY shadow window: when can the blocked queue head start?
+
+    ``est_end_bases`` / ``sizes`` are the incrementally maintained
+    per-running-job estimated-end bases (clamped to ``now`` here, exactly
+    like ``Simulator._est_end``) and current sizes.  Accumulates releases
+    in ascending (est_end, size) order — the order the legacy Python
+    ``sorted()`` loop used — until ``avail`` covers ``need``.
+
+    Returns ``(t_shadow, extra)``: the head's reservation start and the
+    spare nodes at that moment.  ``(inf, 0)`` when the running set cannot
+    ever cover the head (its kill-time estimates are finite, so this only
+    happens for a head larger than the machine's usable pool).
+    """
+    ends = np.maximum(np.asarray(est_end_bases, dtype=np.float64), now)
+    szs = np.asarray(sizes, dtype=np.int64)
+    order = np.lexsort((szs, ends))
+    csum = avail + np.cumsum(szs[order])
+    i = int(np.searchsorted(csum, need))
+    if i >= len(csum):
+        return math.inf, 0
+    return float(ends[order[i]]), int(csum[i]) - need
+
+
+def backfill_prefilter(
+    need_mins: Sequence[float],
+    supply_bound: float,
+) -> np.ndarray:
+    """Stage-1 backfill prefilter: supply-feasible candidate indices.
+
+    ``need_mins`` is the queue window's cached minimum start sizes
+    (``inf`` for on-demand jobs, which never backfill); ``supply_bound``
+    is an upper bound on any candidate's visible supply (free pool +
+    every idle noticed reservation).  Supply only shrinks while the
+    backfill loop starts jobs, so every index dropped here is one the
+    legacy per-candidate scan would have ``continue``-d over.  An empty
+    result lets the caller skip the shadow-window computation entirely.
+
+    Candidates holding returned-lease nodes see more supply than the
+    bound; the caller re-adds those few by hand (the hold book is
+    per-job and tiny).
+    """
+    needs = np.asarray(need_mins, dtype=np.float64)
+    return np.flatnonzero(needs <= supply_bound)
+
+
+def backfill_shadow_filter(
+    need_mins: np.ndarray,
+    est_remainings: np.ndarray,
+    candidates: np.ndarray,
+    spare_budget: int,
+    now: float,
+    t_shadow: float,
+) -> np.ndarray:
+    """Stage-2 backfill prefilter against the EASY shadow window.
+
+    Applies only when there are no reservations to borrow from and only
+    to candidates without returned-lease holds: such a candidate starts
+    entirely from the free pool, so it must either fit the shadow hole
+    at its fastest (full-size) estimate — ``est_remaining`` exactly, for
+    rigid and malleable alike — or fit its minimum size inside the
+    head's spare budget (``extra``); both bounds only tighten as the
+    loop starts jobs, so dropped candidates are exactly legacy
+    ``continue``-s.  Survivors then run the exact legacy checks.
+    """
+    needs = need_mins[candidates]
+    ests = est_remainings[candidates]
+    return candidates[(needs <= spare_budget) | (now + ests <= t_shadow)]
 
 
 def expected_releases_before(

@@ -25,22 +25,36 @@ registry — so sweeps span mechanisms x scenarios x seeds::
 Each run replaces the workload's seed, builds the trace, simulates one
 mechanism, and collects :class:`Metrics`.  Fan-out uses a process pool
 (simulations are CPU-bound pure Python); environments that forbid
-subprocesses fall back to serial execution transparently.
+subprocesses fall back to serial execution with a logged warning naming
+the triggering exception.
+
+Aggregation is *streaming*: workers return compact per-run metric rows
+(plus an optional down-sampled record summary — ``record_summary``), so
+month-scale runs never pipe full JobRecord sets back to the parent;
+:meth:`Experiment.run_stream` yields results in completion order for
+callers that aggregate on the fly, and the ``scale`` knob multiplies
+every synthetic workload's ``n_jobs``/``horizon_days`` so one sweep
+definition serves 600-job CI smokes and 50k-job scale runs alike
+(benchmarks/bench_scheduler.bench_scale).
 """
 from __future__ import annotations
 
+import logging
 import os
+import time
 from dataclasses import dataclass, field, fields as dataclass_fields, replace
 from typing import Dict, Iterator, List, Mapping, Optional, Sequence, Tuple, \
     Union
 
 import numpy as np
 
-from .metrics import Metrics, collect
+from .metrics import Metrics, collect, summarize_records
 from .policy import UnknownPolicyError, resolve_mechanism
 from .simulator import SimConfig, Simulator
 from .workloads import Scenario, UnknownWorkloadError, WorkloadConfig, \
     generate, get_scenario, notice_mix
+
+log = logging.getLogger(__name__)
 
 #: what Experiment accepts per workload cell
 WorkloadLike = Union[WorkloadConfig, Scenario, str]
@@ -54,6 +68,8 @@ class RunSpec:
     workload: Union[WorkloadConfig, Scenario]
     seed: int
     sim_kw: Tuple[Tuple[str, object], ...] = ()  # frozen SimConfig overrides
+    #: max records in the worker's down-sampled summary (0 = no summary)
+    summary_records: int = 0
 
     def key(self, names: Sequence[str]) -> tuple:
         """Group key: each name is a RunSpec field, a workload field, or —
@@ -76,12 +92,19 @@ class RunSpec:
 
 @dataclass(frozen=True)
 class RunResult:
+    """One run's compact result row: metrics, wall time, and (when
+    ``Experiment.record_summary`` asks for one) a down-sampled record
+    summary — never the full JobRecord set."""
+
     spec: RunSpec
     metrics: Metrics
+    elapsed_s: float = 0.0
+    summary: Optional[dict] = None
 
 
 def _execute(spec: RunSpec) -> RunResult:
     """Top-level so process pools can pickle it."""
+    t0 = time.perf_counter()
     wl = spec.workload
     if isinstance(wl, Scenario):
         jobs, n_nodes = wl.realize(seed=spec.seed)
@@ -93,12 +116,15 @@ def _execute(spec: RunSpec) -> RunResult:
                     **dict(spec.sim_kw))
     sim = Simulator(cfg, jobs)
     sim.run()
-    return RunResult(spec, collect(sim))
+    summary = (summarize_records(sim.records, spec.summary_records)
+               if spec.summary_records else None)
+    return RunResult(spec, collect(sim),
+                     elapsed_s=time.perf_counter() - t0, summary=summary)
 
 
 @dataclass
 class Experiment:
-    """A mechanisms x workloads x seeds sweep."""
+    """A mechanisms x workloads x seeds sweep with streaming aggregation."""
 
     mechanisms: Sequence[str]
     workloads: Sequence[WorkloadLike]
@@ -107,17 +133,41 @@ class Experiment:
     #: None -> one process per CPU (capped at the number of runs);
     #: 0 or 1 -> serial in-process execution.
     processes: Optional[int] = None
+    #: multiplies every synthetic workload's n_jobs AND horizon_days
+    #: (offered load is preserved), so one sweep definition spans CI
+    #: smokes to 50k-job scale runs.  Trace-replay Scenarios without
+    #: those params are left untouched.
+    scale: float = 1.0
+    #: > 0: each worker also returns metrics.summarize_records(...) with
+    #: at most this many sampled per-job tuples (RunResult.summary)
+    record_summary: int = 0
+
+    def _scaled(self, wl: Union[WorkloadConfig, Scenario]
+                ) -> Union[WorkloadConfig, Scenario]:
+        if self.scale == 1.0:
+            return wl
+        if isinstance(wl, WorkloadConfig):
+            return replace(wl, n_jobs=max(1, round(wl.n_jobs * self.scale)),
+                           horizon_days=wl.horizon_days * self.scale)
+        params = dict(wl.params)
+        if "n_jobs" in params:
+            params["n_jobs"] = max(1, round(params["n_jobs"] * self.scale))
+        if "horizon_days" in params:
+            params["horizon_days"] = params["horizon_days"] * self.scale
+        return replace(wl, params=params) if params != wl.params else wl
 
     def specs(self) -> Iterator[RunSpec]:
         frozen_kw = tuple(sorted(self.sim_kw.items()))
         for wl in self.workloads:
             if isinstance(wl, str):  # preset name -> Scenario
                 wl = get_scenario(wl)
+            wl = self._scaled(wl)
             for mech in self.mechanisms:
                 for seed in self.seeds:
-                    yield RunSpec(mech, wl, seed, frozen_kw)
+                    yield RunSpec(mech, wl, seed, frozen_kw,
+                                  self.record_summary)
 
-    def run(self) -> "ExperimentResult":
+    def _validated_specs(self) -> List[RunSpec]:
         # fail fast on typos with the registry-listing ValueError (worker
         # tracebacks are much harder to read)
         queue_policy = dict(self.sim_kw).get("queue_policy", "EASY")
@@ -131,25 +181,64 @@ class Experiment:
                 # a bad mix raised in a worker would read as a registry
                 # miss below and trigger a pointless serial re-run
                 notice_mix(spec.workload.notice_mix)
+        return specs
+
+    def _stream(self) -> Iterator[Tuple[int, RunResult]]:
+        """Yield (grid index, RunResult) as runs complete."""
+        specs = self._validated_specs()
         n = self.processes
         if n is None:
             n = min(len(specs), os.cpu_count() or 1)
+        pending = dict(enumerate(specs))
         if n > 1 and len(specs) > 1:
             try:
-                from concurrent.futures import ProcessPoolExecutor
+                from concurrent.futures import ProcessPoolExecutor, \
+                    as_completed
                 from concurrent.futures.process import BrokenProcessPool
-                with ProcessPoolExecutor(max_workers=n) as pool:
-                    return ExperimentResult(list(pool.map(_execute, specs)))
+                pool = ProcessPoolExecutor(max_workers=n)
+                try:
+                    futs = {pool.submit(_execute, s): i
+                            for i, s in pending.items()}
+                    for fut in as_completed(futs):
+                        i = futs[fut]
+                        result = fut.result()
+                        del pending[i]
+                        yield i, result
+                finally:
+                    # a consumer that stops early (break / raise) closes
+                    # this generator: drop the queued runs instead of
+                    # blocking until the whole discarded sweep finishes
+                    pool.shutdown(wait=False, cancel_futures=True)
+                return
             except (ImportError, NotImplementedError, OSError,
-                    PermissionError, BrokenProcessPool):
-                pass  # no usable subprocess support: degrade to serial
-            except (UnknownPolicyError, UnknownWorkloadError):
+                    PermissionError, BrokenProcessPool) as exc:
+                # no usable subprocess support: degrade to serial, loudly
+                log.warning(
+                    "Experiment: process fan-out unavailable (%r); "
+                    "falling back to serial execution of %d remaining "
+                    "run(s)", exc, len(pending))
+            except (UnknownPolicyError, UnknownWorkloadError) as exc:
                 # mechanisms and scenarios resolved in-process above, so a
                 # registry miss can only be spawn-start workers lacking
                 # the parent-registered custom policies/sources: degrade
                 # to serial.  Genuine simulation errors propagate
-                pass
-        return ExperimentResult([_execute(s) for s in specs])
+                log.warning(
+                    "Experiment: spawn-start workers miss a registry "
+                    "entry (%r); falling back to serial execution of %d "
+                    "remaining run(s)", exc, len(pending))
+        for i, s in sorted(pending.items()):
+            yield i, _execute(s)
+
+    def run_stream(self) -> Iterator[RunResult]:
+        """Yield each RunResult as it completes (streaming aggregation:
+        nothing is retained for finished runs)."""
+        for _i, result in self._stream():
+            yield result
+
+    def run(self) -> "ExperimentResult":
+        """Run the sweep and collect the compact rows in grid order."""
+        indexed = sorted(self._stream(), key=lambda it: it[0])
+        return ExperimentResult([r for _i, r in indexed])
 
 
 class ExperimentResult:
@@ -194,6 +283,7 @@ class ExperimentResult:
                 if "notice_mix" in wl.params:
                     row["notice_mix"] = wl.params["notice_mix"]
             row.update(r.metrics.as_dict())
+            row["elapsed_s"] = r.elapsed_s
             out.append(row)
         return out
 

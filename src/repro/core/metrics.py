@@ -1,8 +1,8 @@
-"""Evaluation metrics (paper §IV-D)."""
+"""Evaluation metrics (paper §IV-D) and streaming record summaries."""
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional
+from typing import Dict, List, Mapping, Optional
 
 import numpy as np
 
@@ -32,6 +32,43 @@ class Metrics:
 def _avg_turnaround(recs: List[JobRecord]) -> float:
     ts = [r.turnaround for r in recs if r.turnaround is not None]
     return float(np.mean(ts)) / 3600.0 if ts else float("nan")
+
+
+def summarize_records(records: Mapping[int, JobRecord],
+                      max_records: int = 256) -> dict:
+    """Down-sampled per-run record summary for streaming sweeps.
+
+    Month-scale runs produce tens of thousands of JobRecords; shipping
+    them through the process-pool pipe (and holding them per finished
+    run) defeats streaming aggregation.  This keeps the distribution —
+    turnaround/wait percentiles over *all* records — plus an evenly
+    strided sample of at most ``max_records`` compact per-job tuples
+    ``(jid, jtype, turnaround_s, n_preempted, n_shrunk)`` for record-
+    level inspection.
+    """
+    recs = list(records.values())
+    turns = np.asarray([r.turnaround for r in recs
+                        if r.turnaround is not None], dtype=np.float64)
+    waits = np.asarray([r.first_start - r.job.submit_time for r in recs
+                        if r.first_start is not None], dtype=np.float64)
+
+    def _pcts(a: np.ndarray) -> dict:
+        if a.size == 0:
+            return {"p50": float("nan"), "p90": float("nan"),
+                    "p99": float("nan")}
+        p50, p90, p99 = np.percentile(a, (50, 90, 99))
+        return {"p50": float(p50), "p90": float(p90), "p99": float(p99)}
+
+    stride = max(1, -(-len(recs) // max_records)) if max_records > 0 else 1
+    sample = [(r.job.jid, r.job.jtype.value,
+               None if r.turnaround is None else round(r.turnaround, 3),
+               r.n_preempted, r.n_shrunk)
+              for r in recs[::stride]] if max_records > 0 else []
+    return {"n_records": len(recs),
+            "sample_stride": stride,
+            "turnaround_s": _pcts(turns),
+            "wait_s": _pcts(waits),
+            "sample": sample}
 
 
 def collect(sim: Simulator) -> Metrics:

@@ -15,8 +15,11 @@ from __future__ import annotations
 import math
 from typing import List, Tuple
 
-from ..decision import (apportion_shrink, expected_releases_before,
-                        select_preemption_victims)
+import numpy as np
+
+from ..decision import (apportion_shrink, backfill_prefilter,
+                        backfill_shadow_filter, easy_shadow,
+                        expected_releases_before, select_preemption_victims)
 from ..job import JobType
 from ..policy import (ArrivalPolicy, ElasticityPolicy, NoticePolicy,
                       PolicyBundle, QueuePolicy, SchedulerOps, SchedulerView,
@@ -167,32 +170,61 @@ class FcfsEasyBackfill(QueuePolicy):
         return lambda jid: _fcfs_key(front_get, jobs, jid)
 
     def _shadow(self, view: SchedulerView, head: int) -> Tuple[float, int]:
-        """EASY reservation for the queue head over estimated releases."""
+        """EASY reservation for the queue head over estimated releases
+        (the vectorized kernel over the incrementally maintained est-end
+        arrays — see decision.easy_shadow)."""
         job = view.jobs[head]
         need = job.n_min if job.jtype is JobType.MALLEABLE else job.size
         avail = view.avail_for(head)
         if avail >= need:
             return view.now, avail - need
-        rel = sorted((view.est_end(rs), rs.cur_size)
-                     for rs in view.running.values())
-        for t, k in rel:
-            avail += k
-            if avail >= need:
-                return t, avail - need
-        return math.inf, 0
+        bases, sizes = view.est_end_arrays()
+        return easy_shadow(avail, need, bases, sizes, view.now)
 
     def backfill(self, ops: SchedulerOps, head: int) -> None:
-        t_shadow, extra = self._shadow(ops, head)
-        jobs, hold_of, borrowable = ops.jobs, ops.hold_of, ops.borrowable
-        est_remaining, allow_borrow = ops.est_remaining, \
-            ops.cfg.allow_reserved_backfill
+        queue = ops.queue
+        qlen = len(queue)
+        if qlen <= 1:
+            return
+        allow_borrow = ops.cfg.allow_reserved_backfill
+        pool, deadline = ops.borrow_pool() if allow_borrow else (0, math.inf)
         ledger, now = ops.ledger, ops.now
-        for jid in list(ops.queue[1:1 + ops.cfg.backfill_depth]):
+        lo, hi = 1, min(qlen, 1 + ops.cfg.backfill_depth)
+        needs_l, ests_l = queue.meta_window(lo, hi)
+        bound = ledger.free + pool
+        needs = np.asarray(needs_l, dtype=np.float64)
+        stage1 = backfill_prefilter(needs, bound)
+        hold_book = ledger.job_hold
+        if stage1.size == 0 and not hold_book:
+            return  # nothing can start: skip the shadow computation too
+        t_shadow, extra = self._shadow(ops, head)
+        if pool > 0:
+            keep = set(map(int, stage1))
+        else:
+            ests = np.asarray(ests_l, dtype=np.float64)
+            keep = set(map(int, backfill_shadow_filter(
+                needs, ests, stage1, extra, now, t_shadow)))
+        # returned-lease holders see more supply than either bound
+        for jid, hold in hold_book.items():
+            if jid in queue:
+                i = queue.position(jid) - lo
+                if 0 <= i < hi - lo and i not in keep \
+                        and needs_l[i] <= bound + hold:
+                    keep.add(i)
+        if not keep:
+            return
+        cand = [queue[lo + i] for i in sorted(keep)]
+        jobs, hold_of = ops.jobs, ops.hold_of
+        est_remaining = ops.est_remaining
+        for jid in cand:
             job = jobs[jid]
             if job.jtype is JobType.ONDEMAND:
                 continue  # arrived ods start only via their own path
             need_min = job.n_min if job.jtype is JobType.MALLEABLE else job.size
-            idle_reserved = borrowable(jid) if allow_borrow else 0
+            est_run = est_remaining[jid]
+            # == borrowable(jid) with the pool scan hoisted out of the loop
+            idle_reserved = pool if pool > 0 \
+                and ops.borrow_eligible(jid, deadline) else 0
             plain = ledger.free + hold_of(jid)
             total = plain + idle_reserved
             if total < need_min:
@@ -201,7 +233,6 @@ class FcfsEasyBackfill(QueuePolicy):
                 min(job.n_max, total)
             from_plain = min(size, plain)
             borrow = size - from_plain
-            est_run = est_remaining[jid]
             if job.jtype is JobType.MALLEABLE:
                 est_run = job.t_setup + (est_run - job.t_setup) * job.n_max / size
             fits_hole = now + est_run <= t_shadow
@@ -211,7 +242,8 @@ class FcfsEasyBackfill(QueuePolicy):
             if not fits_hole:
                 extra -= uses_free
             ops.start_backfilled(jid, size, borrow)
-            idle_reserved -= borrow
+            if borrow > 0:  # reservations shrank; re-derive the pool view
+                pool, deadline = ops.borrow_pool()
 
 
 @register_policy("queue", "FCFS")

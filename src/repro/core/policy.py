@@ -57,9 +57,14 @@ Registering a custom policy::
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import TYPE_CHECKING, Callable, Dict, List, Optional, Tuple
+from typing import TYPE_CHECKING, Callable, Dict, Optional, Tuple
+
+import numpy as np
 
 from .job import JobType
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from .structures import OrderedSet, WaitQueue
 
 if TYPE_CHECKING:  # pragma: no cover - import cycle guard, typing only
     from .job import JobSpec, RunState
@@ -82,7 +87,9 @@ class SchedulerView:
 
         jobs           jid -> JobSpec for every job in the trace
         running        jid -> RunState of running jobs
-        queue          waiting jids (FCFS-sorted each scheduling pass)
+        queue          waiting jids (a WaitQueue, kept in order-key order;
+                       supports the legacy list surface: indexing, slices,
+                       iteration, ``in``, ``len``)
         collecting     od jids collecting node releases, notice order
         od_status      od jid -> "noticed"|"arrived"|"timeout"|"done"
         est_remaining  jid -> current user-estimate of remaining runtime
@@ -92,7 +99,14 @@ class SchedulerView:
         reserved_of(od) / hold_of(jid)    idle-pool sizes per job
         avail_for(jid)    nodes the job could start on now (free+hold+own)
         borrowable(jid)   idle reserved nodes the job may borrow (§III-B1)
+        borrow_pool()     the borrow supply as (pool, earliest owner
+                          arrival); borrow_eligible(jid, deadline) is the
+                          per-job §III-B1 rule — together they are
+                          borrowable(), hoistable to once per pass
         est_end(rs)       estimated end used by EASY/CUP (user estimate)
+        est_end_arrays()  (est-end bases, sizes) numpy arrays over the
+                          running set, maintained incrementally — feed
+                          them to decision.easy_shadow
 
     `now` and `free` change every event and are properties.
     """
@@ -102,8 +116,8 @@ class SchedulerView:
         self.cfg = sim.cfg
         self.jobs: Dict[int, "JobSpec"] = sim.jobs
         self.running: Dict[int, "RunState"] = sim.running
-        self.queue: List[int] = sim.queue
-        self.collecting: List[int] = sim.collecting
+        self.queue: "WaitQueue" = sim.queue
+        self.collecting: "OrderedSet" = sim.collecting
         self.od_status: Dict[int, str] = sim.od_status
         self.est_remaining: Dict[int, float] = sim.est_remaining
         self.od_front_map: Dict[int, bool] = sim.od_front
@@ -112,6 +126,8 @@ class SchedulerView:
         self.hold_of = sim.ledger.hold_of
         self.avail_for = sim._avail_for
         self.borrowable = sim._borrowable
+        self.borrow_pool = sim._borrow_pool
+        self.borrow_eligible = sim._borrow_eligible
         self.est_end = sim._est_end
 
     @property
@@ -125,6 +141,22 @@ class SchedulerView:
     def od_front(self, jid: int) -> bool:
         return bool(self.od_front_map.get(jid))
 
+    def est_end_arrays(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Per-running-job (est-end base, cur_size) arrays for the EASY
+        shadow kernel.  The bases are the un-clamped ``est_end`` values
+        (clamp to ``now`` is part of :func:`~repro.core.decision.easy_shadow`),
+        cached by the simulator at the END-reschedule events where they
+        can change, so no per-job ``est_end()`` recomputation happens
+        here — only an O(running) materialization of the cache into the
+        two arrays (the running set is machine-bounded and small)."""
+        cache = self._sim._estend_cache
+        if not cache:
+            return (np.empty(0, dtype=np.float64),
+                    np.empty(0, dtype=np.int64))
+        bases, sizes = zip(*cache.values())
+        return (np.asarray(bases, dtype=np.float64),
+                np.asarray(sizes, dtype=np.int64))
+
 
 class SchedulerOps(SchedulerView):
     """A :class:`SchedulerView` plus the mutation primitives policies use.
@@ -134,6 +166,9 @@ class SchedulerOps(SchedulerView):
     never touch accounting directly:
 
         push_event(t, kind, data)      schedule a simulator event
+        invalidate_order_key(jid)      recompute a queued job's cached
+                                       order key (incremental queues;
+                                       no-op for non-members)
         reserve_from_free(od, want)    move free nodes into od's reservation
         collect(od)                    enroll od to collect future releases
         preempt(jid, beneficiary=od)   vacate a running job; nodes route to
@@ -151,6 +186,7 @@ class SchedulerOps(SchedulerView):
     def __init__(self, sim: "Simulator"):
         super().__init__(sim)
         self.push_event = sim._push
+        self.invalidate_order_key = sim.queue.invalidate
         self.reserve_from_free = sim.ledger.reserve_from_free
         self.expand_occupied = sim._expand
         self.expand_from_free = sim._expand_from_free
@@ -220,14 +256,26 @@ class QueuePolicy(Policy):
 
     kind = "queue"
 
+    #: Incremental-queue contract (docs/performance.md): True promises a
+    #: queued job's order key is constant except at requeue and at the
+    #: explicitly announced invalidation points (the simulator's od-front
+    #: pinning; a custom policy's ``ops.invalidate_order_key`` calls), so
+    #: the simulator may cache keys and keep the queue sorted in O(log n)
+    #: per operation.  Set False for keys that read clock- or load-
+    #: dependent state — the queue then re-sorts with fresh keys every
+    #: scheduling pass (the legacy O(n log n) behavior).
+    order_keys_stable: bool = True
+
     def order_key(self, view: SchedulerView, jid: int):
         raise NotImplementedError
 
     def make_order_key(self, view: SchedulerView) -> Callable[[int], tuple]:
-        """Build the sort-key callable the simulator uses on every pass.
+        """Build the order-key callable the wait queue caches per member
+        (or, for ``order_keys_stable = False`` policies, calls afresh on
+        every pass).
 
         The default wraps :meth:`order_key`; hot-path policies may return
-        a specialized closure instead (the queue re-sorts at every event).
+        a specialized closure instead.
         """
         return lambda jid: self.order_key(view, jid)
 

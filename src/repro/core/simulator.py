@@ -34,6 +34,7 @@ from .cluster import Lease, NodeLedger
 from .job import JobSpec, JobType, NoticeKind, RunState
 from .policy import (ARRIVAL_POLICIES, MECHANISMS, NOTICE_POLICIES,
                      PolicyBundle, SchedulerOps, resolve_mechanism)
+from .structures import OrderedSet, WaitQueue
 
 
 @dataclass
@@ -90,24 +91,29 @@ class Simulator:
         self.now = 0.0
         self._heap: List[Tuple[float, int, str, tuple]] = []
         self._seq = itertools.count()
-        self.queue: List[int] = []           # waiting jids
+        self.queue = WaitQueue()             # waiting jids, order-key sorted
         self.running: Dict[int, RunState] = {}
         self.records: Dict[int, JobRecord] = {j.jid: JobRecord(j) for j in jobs}
         self.od_status: Dict[int, str] = {}  # noticed|arrived|timeout|done
-        self.collecting: List[int] = []      # od jids collecting releases (notice order)
+        self.collecting = OrderedSet()       # od jids collecting releases (notice order)
         self.od_front: Dict[int, bool] = {}  # arrived ods waiting at queue front
         self.leases: Dict[int, List[Lease]] = {}
         self.progress: Dict[int, dict] = {}  # preempted-job carry-over state
         self.est_remaining: Dict[int, float] = {j.jid: j.t_estimate for j in jobs}
         self._epochs: Dict[int, int] = {}    # monotonic per-jid END epoch
+        self._estend_cache: Dict[int, Tuple[float, int]] = {}  # jid -> (est-end base, cur_size)
         self.ops = SchedulerOps(self)        # the handle policies act through
         self._queue_key = self.policies.queue.make_order_key(self.ops)
+        self.queue.configure(self._queue_key,
+                             incremental=self.policies.queue.order_keys_stable,
+                             meta_fn=self._queue_meta)
         # metrics accumulators
         self.occupied_integral = 0.0
         self.waste_node_seconds = 0.0
         self._last_t = 0.0
         self.decision_times: List[float] = []
         self._in_schedule = False
+        self._sched_pending = False
 
         for j in jobs:
             self._push(j.submit_time, "submit", (j.jid,))
@@ -128,10 +134,21 @@ class Simulator:
         self.now = max(self.now, t)
 
     def run(self) -> Dict[int, JobRecord]:
-        while self._heap:
-            t, _, kind, data = heapq.heappop(self._heap)
+        """Drain the event heap.
+
+        Handlers do not re-enter ``_schedule`` per sub-event; they raise
+        ``_sched_pending`` and the loop epilogue runs one scheduling pass
+        per event (handlers invoked it as their final statement, so the
+        hoisted call is behaviorally identical).
+        """
+        heap = self._heap
+        while heap:
+            t, _, kind, data = heapq.heappop(heap)
             self._advance(t)
             getattr(self, f"_on_{kind}")(*data)
+            if self._sched_pending:
+                self._sched_pending = False
+                self._schedule()
             self.ledger.check()
         return self.records
 
@@ -142,7 +159,7 @@ class Simulator:
             self._od_arrival(jid)
         else:
             self.queue.append(jid)
-            self._schedule()
+            self._sched_pending = True
 
     # ---------------------------------------------------------- advance notice
     def _on_notice(self, jid: int) -> None:
@@ -161,7 +178,7 @@ class Simulator:
         if self.ledger.reserved_of(od_jid) >= od.size:
             return  # demand already met by collected releases
         self._preempt(victim, beneficiary=od_jid)
-        self._schedule()
+        self._sched_pending = True
 
     def _on_od_timeout(self, jid: int) -> None:
         if self.od_status.get(jid) != "noticed":
@@ -170,7 +187,7 @@ class Simulator:
         if jid in self.collecting:
             self.collecting.remove(jid)
         self.ledger.release_reservation(jid)
-        self._schedule()
+        self._sched_pending = True
 
     # ------------------------------------------------------------- od arrival
     def _od_arrival(self, jid: int) -> None:
@@ -199,7 +216,7 @@ class Simulator:
             self.queue.append(jid)
             if jid not in self.collecting:
                 self.collecting.append(jid)
-        self._schedule()
+        self._sched_pending = True
 
     def _start_od(self, jid: int) -> None:
         job = self.jobs[jid]
@@ -214,11 +231,16 @@ class Simulator:
             self.collecting.remove(jid)
         self._begin_run(jid, job.size)
         self.od_front.pop(jid, None)
+        # front-pinning is the one builtin event that changes an order key;
+        # callers dequeue before starting, so this is a documented no-op
+        # kept as the pattern custom key-changing events must follow
+        self.queue.invalidate(jid)
 
     # -------------------------------------------------- preempt / shrink / expand
     def _preempt(self, jid: int, beneficiary: Optional[int] = None) -> None:
         """Vacate a running job; nodes go to `beneficiary`'s reservation."""
         rs = self.running.pop(jid)
+        self._estend_cache.pop(jid, None)
         job = rs.job
         rec = self.records[jid]
         rec.n_preempted += 1
@@ -319,20 +341,41 @@ class Simulator:
             rec.first_start = self.now
         self._reschedule_end(jid)
 
-    def _est_end(self, rs: RunState) -> float:
-        """Estimated end used by EASY/CUP (user estimate, not actual)."""
+    def _est_end_base(self, rs: RunState) -> float:
+        """The un-clamped estimated end; constant between _reschedule_end
+        calls (est_remaining, last_resize, and cur_size only change at
+        events that reschedule the END), so it is cached per running job
+        for the vectorized EASY shadow window."""
         start = rs.last_resize - rs.job.t_setup
         est = self.est_remaining[rs.job.jid]
         if rs.job.jtype is JobType.MALLEABLE:
             est = rs.job.t_setup + (est - rs.job.t_setup) * rs.job.n_max / max(rs.cur_size, 1)
-        return max(start + est, self.now)
+        return start + est
+
+    def _est_end(self, rs: RunState) -> float:
+        """Estimated end used by EASY/CUP (user estimate, not actual)."""
+        return max(self._est_end_base(rs), self.now)
+
+    def _queue_meta(self, jid: int) -> Tuple[float, float]:
+        """The WaitQueue metas the vectorized backfill prefilter scans:
+        (minimum nodes to start — inf for on-demand jobs, which never
+        backfill —, remaining-runtime estimate).  Both are constant while
+        the job waits: est_remaining changes only on preemption, which
+        requeues the job and recomputes its metas."""
+        job = self.jobs[jid]
+        if job.jtype is JobType.ONDEMAND:
+            return math.inf, self.est_remaining[jid]
+        need = float(job.n_min if job.jtype is JobType.MALLEABLE else job.size)
+        return need, self.est_remaining[jid]
 
     def _reschedule_end(self, jid: int) -> None:
         rs = self.running[jid]
         self._epochs[jid] = self._epochs.get(jid, 0) + 1
         rs.epoch = self._epochs[jid]
+        base = self._est_end_base(rs)
+        self._estend_cache[jid] = (base, rs.cur_size)
         natural = rs.natural_end(self.now)
-        kill = self._est_end(rs)
+        kill = max(base, self.now)
         self._push(min(natural, max(kill, self.now)), "end", (jid, rs.epoch))
 
     def _on_end(self, jid: int, epoch: int) -> None:
@@ -343,6 +386,7 @@ class Simulator:
         done = rs.work_done(self.now)
         killed = done < job.work - 1e-6
         del self.running[jid]
+        self._estend_cache.pop(jid, None)
         rec = self.records[jid]
         rec.completion = self.now
         rec.killed = killed
@@ -360,7 +404,7 @@ class Simulator:
             freed = self._repay_leases(jid, freed)
         if freed > 0:
             self._route_release(freed)
-        self._schedule()
+        self._sched_pending = True
 
     def _repay_leases(self, od: int, avail: int) -> int:
         """Return leased nodes to lenders (paper §III-B3)."""
@@ -415,7 +459,7 @@ class Simulator:
             changed = True
             while changed:
                 changed = False
-                self.queue.sort(key=self._queue_key)
+                self.queue.refresh()   # incremental queues are always sorted
                 if not self.queue:
                     break
                 head = self.queue[0]
@@ -446,24 +490,34 @@ class Simulator:
     def _steal_holds(self, head: int) -> int:
         """Deadlock resolution: the queue head outranks returned-lease holds
         of jobs *behind* it.  Transfers just enough held nodes (youngest
-        holder first) into the free pool; returns nodes transferred."""
+        holder first) into the free pool.
+
+        Only the hold book's few entries can contribute, so the legacy
+        reversed full-queue walk reduces to sorting the queued holders by
+        rank — same nodes moved in the same order, without the O(queue)
+        scan per blocked head.  Returns the nodes transferred when they
+        cover the shortfall, else 0: an insufficient steal cannot make
+        ``_try_start`` succeed, so the caller skips that doomed retry
+        (the transfers themselves stand either way, exactly as before).
+        """
         job = self.jobs[head]
         need_min = job.n_min if job.jtype is JobType.MALLEABLE else job.size
         short = need_min - self._avail_for(head)
         if short <= 0:
             return 0
+        hold_book = self.ledger.job_hold
+        if not hold_book:
+            return 0
+        holders = sorted((self.queue.position(jid), jid) for jid in hold_book
+                         if jid != head and jid in self.queue)
         moved = 0
-        for jid in reversed(self.queue[1:]):
+        for _rank, jid in reversed(holders):
             if moved >= short:
                 break
-            k = min(self.ledger.hold_of(jid), short - moved)
-            if k > 0:
-                self.ledger.job_hold[jid] -= k
-                if self.ledger.job_hold[jid] == 0:
-                    del self.ledger.job_hold[jid]
-                self.ledger.free += k
-                moved += k
-        return moved if moved >= short else moved
+            k = min(hold_book[jid], short - moved)
+            self.ledger.hold_to_free(jid, k)
+            moved += k
+        return moved if moved >= short else 0
 
     def _try_start(self, jid: int) -> bool:
         job = self.jobs[jid]
@@ -487,27 +541,32 @@ class Simulator:
         self._begin_run(jid, size)
         return True
 
-    def _borrowable(self, jid: int) -> int:
-        """Idle reserved nodes this waiting job may borrow (paper §III-B1).
-
-        Only reservations of *not-yet-arrived* on-demand jobs are usable.
-        Rigid borrowers must be estimated to finish before the earliest
-        owner arrival (their preemption is expensive); malleable borrowers
-        may run past it — the 2-minute-warning preemption only costs setup.
-        """
+    def _borrow_pool(self) -> Tuple[int, float]:
+        """The §III-B1 borrow supply: (idle nodes reserved for
+        *not-yet-arrived* on-demand jobs, earliest estimated owner
+        arrival).  The backfill pass hoists this to once per pass."""
         pool, deadline = 0, math.inf
         for od, k in self.ledger.od_reserved.items():
             if self.od_status.get(od) == "noticed":
                 pool += k
                 deadline = min(deadline, self.jobs[od].est_arrival or math.inf)
+        return pool, deadline
+
+    def _borrow_eligible(self, jid: int, deadline: float) -> bool:
+        """Paper §III-B1 borrower rule: malleable borrowers may run past
+        the owner's arrival (the 2-minute-warning preemption only costs
+        setup); rigid borrowers must be estimated to finish before it
+        (their preemption is expensive)."""
+        job = self.jobs[jid]
+        return (job.jtype is JobType.MALLEABLE
+                or self.now + self.est_remaining[jid] <= deadline)
+
+    def _borrowable(self, jid: int) -> int:
+        """Idle reserved nodes this waiting job may borrow (§III-B1)."""
+        pool, deadline = self._borrow_pool()
         if pool == 0:
             return 0
-        job = self.jobs[jid]
-        if job.jtype is JobType.MALLEABLE:
-            return pool
-        if self.now + self.est_remaining[jid] <= deadline:
-            return pool
-        return 0
+        return pool if self._borrow_eligible(jid, deadline) else 0
 
     def _try_start_borrowed(self, jid: int) -> bool:
         """Start the queue head on idle *reserved* nodes (paper §III-B1):

@@ -1,0 +1,138 @@
+"""Edge cases of the vectorized decision kernels (repro.core.decision).
+
+Randomized properties live in tests/test_properties.py (hypothesis,
+importorskip'd); these deterministic cases pin the boundary semantics the
+simulator's bit-for-bit golden guarantee leans on: need <= 0, zero
+slack, exact-cover cumsum boundaries, largest-remainder ties, and the
+shadow/prefilter kernels against their Python reference loops.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (apportion_shrink, backfill_prefilter,
+                        backfill_shadow_filter, easy_shadow,
+                        select_preemption_victims)
+
+
+# ------------------------------------------------- select_preemption_victims
+def test_paa_need_nonpositive_returns_empty():
+    assert select_preemption_victims([100, 50], [1.0, 2.0], 0) == ([], 0)
+    assert select_preemption_victims([100, 50], [1.0, 2.0], -5) == ([], 0)
+    assert select_preemption_victims([], [], 0) == ([], 0)
+
+
+def test_paa_insufficient_supply_returns_empty():
+    assert select_preemption_victims([10, 20], [1.0, 2.0], 31) == ([], 0)
+
+
+def test_paa_exact_cover_cumsum_boundary():
+    # need lands exactly on a cumsum entry: that prefix, surplus 0 —
+    # searchsorted must not include one victim too many
+    victims, surplus = select_preemption_victims(
+        [100, 100], [1.0, 2.0], 100)
+    assert victims == [0] and surplus == 0
+    victims, surplus = select_preemption_victims(
+        [100, 100], [1.0, 2.0], 200)
+    assert victims == [0, 1] and surplus == 0
+    # one past the boundary pulls in the next victim
+    victims, surplus = select_preemption_victims(
+        [100, 100], [1.0, 2.0], 101)
+    assert victims == [0, 1] and surplus == 99
+
+
+def test_paa_equal_overheads_stable_order():
+    victims, _ = select_preemption_victims([50, 50, 50], [7.0, 7.0, 7.0], 120)
+    assert victims == [0, 1, 2]
+
+
+# --------------------------------------------------------- apportion_shrink
+def test_apportion_need_nonpositive_returns_zeros():
+    assert apportion_shrink([10, 10], [2, 2], 0) == [0, 0]
+    assert apportion_shrink([10, 10], [2, 2], -1) == [0, 0]
+
+
+def test_apportion_zero_slack_cannot_cover():
+    # cur == min everywhere: no slack, any positive need fails to []
+    assert apportion_shrink([10, 10], [10, 10], 1) == []
+
+
+def test_apportion_exact_slack_cover():
+    # need equals the total slack: every job sheds down to its minimum
+    assert apportion_shrink([10, 8], [4, 6], 8) == [6, 2]
+
+
+def test_apportion_largest_remainder_ties_go_to_first():
+    # equal slack, odd need: quotas are 1.5/1.5 — the stable argsort
+    # hands the leftover node to the earlier job
+    assert apportion_shrink([3, 3], [1, 1], 3) == [2, 1]
+    # and with four tied jobs, the first `short` jobs get the extra node
+    assert apportion_shrink([3, 3, 3, 3], [1, 1, 1, 1], 6) == [2, 2, 1, 1]
+
+
+def test_apportion_respects_per_job_slack_cap():
+    sheds = apportion_shrink([20, 4], [2, 3], 17)
+    assert sheds == [16, 1]
+    assert all(s <= c - m for s, c, m in zip(sheds, [20, 4], [2, 3]))
+
+
+# -------------------------------------------------------------- easy_shadow
+def _shadow_reference(avail, need, bases, sizes, now):
+    """The legacy Python loop easy_shadow replaced."""
+    rel = sorted((max(b, now), s) for b, s in zip(bases, sizes))
+    for t, k in rel:
+        avail += k
+        if avail >= need:
+            return t, avail - need
+    return math.inf, 0
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_easy_shadow_matches_reference_loop(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 40))
+    bases = rng.uniform(0.0, 1e5, n)
+    sizes = rng.integers(1, 512, n)
+    now = float(rng.uniform(0.0, 1e5))
+    avail = int(rng.integers(0, 256))
+    need = int(rng.integers(1, 4096))
+    assert easy_shadow(avail, need, bases, sizes, now) == \
+        _shadow_reference(avail, need, bases, sizes, now)
+
+
+def test_easy_shadow_exact_cover_and_tie_order():
+    # exact boundary: the crossing release's time, zero extra
+    assert easy_shadow(0, 30, [5.0, 9.0], [10, 20], 0.0) == (9.0, 0)
+    # tied est-ends accumulate in ascending-size order (the legacy
+    # tuple-sort), which decides the surplus at the crossing
+    assert easy_shadow(0, 5, [7.0, 7.0], [20, 10], 0.0) == (7.0, 5)
+    # past-due estimates clamp to now
+    t, extra = easy_shadow(0, 10, [3.0], [10], 50.0)
+    assert (t, extra) == (50.0, 0)
+
+
+def test_easy_shadow_insufficient_supply_is_infinite():
+    assert easy_shadow(0, 100, [1.0], [10], 0.0) == (math.inf, 0)
+    assert easy_shadow(0, 1, [], [], 0.0) == (math.inf, 0)
+
+
+# ------------------------------------------------------- backfill prefilter
+def test_backfill_prefilter_supply_bound_and_od_inf():
+    needs = [64.0, math.inf, 128.0, 4096.0]
+    idx = backfill_prefilter(needs, 128.0)
+    assert idx.tolist() == [0, 2]         # inf (on-demand) never passes
+    assert backfill_prefilter(needs, 0.0).tolist() == []
+
+
+def test_backfill_shadow_filter_budget_or_hole():
+    needs = np.array([10.0, 50.0, 50.0, 50.0])
+    ests = np.array([100.0, 100.0, 1e6, 100.0])
+    cand = np.arange(4)
+    # budget 20, shadow at now+200: idx0 fits the budget, idx1/idx3 fit
+    # the hole, idx2 fits neither
+    keep = backfill_shadow_filter(needs, ests, cand, 20, 0.0, 200.0)
+    assert keep.tolist() == [0, 1, 3]
+    # only a subset of candidates is ever considered
+    keep = backfill_shadow_filter(needs, ests, np.array([2, 3]), 20, 0.0, 200.0)
+    assert keep.tolist() == [3]

@@ -248,3 +248,65 @@ def test_experiment_parallel_matches_serial():
         assert am.keys() == bm.keys()
         for k in am:
             assert am[k] == bm[k] or (am[k] != am[k] and bm[k] != bm[k]), k
+
+
+def test_experiment_run_stream_yields_compact_rows_with_summaries():
+    wl = WorkloadConfig(n_jobs=40, n_nodes=256, n_projects=8, horizon_days=2.0)
+    exp = Experiment(mechanisms=("BASE", "CUA&SPAA"), workloads=(wl,),
+                     seeds=(0,), processes=1, record_summary=16)
+    seen = []
+    for r in exp.run_stream():           # streaming: consumed one by one
+        assert r.elapsed_s > 0.0
+        assert r.summary is not None
+        assert r.summary["n_records"] == 40
+        assert len(r.summary["sample"]) <= 16
+        assert r.summary["turnaround_s"]["p50"] <= \
+            r.summary["turnaround_s"]["p99"]
+        seen.append(r.spec.mechanism)
+    assert sorted(seen) == ["BASE", "CUA&SPAA"]
+    # without the knob, no summary rides along (compact rows only)
+    r = next(iter(Experiment(mechanisms=("BASE",), workloads=(wl,),
+                             seeds=(0,), processes=1).run()))
+    assert r.summary is None
+    assert "elapsed_s" in Experiment(
+        mechanisms=("BASE",), workloads=(wl,), seeds=(0,),
+        processes=1).run().rows()[0]
+
+
+def test_experiment_scale_knob_scales_jobs_and_horizon():
+    wl = WorkloadConfig(n_jobs=40, n_nodes=256, n_projects=8, horizon_days=2.0)
+    exp = Experiment(mechanisms=("BASE",), workloads=(wl,), seeds=(0,),
+                     processes=1, scale=0.5)
+    spec = next(exp.specs())
+    assert spec.workload.n_jobs == 20
+    assert spec.workload.horizon_days == 1.0
+    result = exp.run()
+    assert result.runs[0].metrics.n_jobs == 20
+    # scenarios scale through their source params when present
+    from repro.core import Scenario
+    sc = Scenario("theta", params={"n_jobs": 40, "horizon_days": 2.0,
+                                   "n_nodes": 256, "n_projects": 8})
+    spec = next(Experiment(mechanisms=("BASE",), workloads=(sc,),
+                           seeds=(0,), scale=2.0).specs())
+    assert spec.workload.params["n_jobs"] == 80
+    assert spec.workload.params["horizon_days"] == 4.0
+
+
+def test_experiment_serial_fallback_logs_warning(monkeypatch, caplog):
+    import concurrent.futures
+
+    class NoPool:
+        def __init__(self, *a, **kw):
+            raise OSError("subprocesses forbidden here")
+
+    monkeypatch.setattr(concurrent.futures, "ProcessPoolExecutor", NoPool)
+    wl = WorkloadConfig(n_jobs=20, n_nodes=256, n_projects=8, horizon_days=2.0)
+    exp = Experiment(mechanisms=("BASE",), workloads=(wl,), seeds=(0, 1),
+                     processes=2)
+    import logging
+    with caplog.at_level(logging.WARNING, logger="repro.core.experiment"):
+        result = exp.run()
+    assert len(result) == 2  # degraded but complete
+    assert any("process fan-out unavailable" in r.message
+               and "subprocesses forbidden here" in r.message
+               for r in caplog.records)

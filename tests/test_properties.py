@@ -11,8 +11,8 @@ from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro.core import (MECHANISMS, JobType, NoticeKind, SimConfig, Simulator,
-                        WorkloadConfig, apportion_shrink, collect, generate,
-                        select_preemption_victims)
+                        WaitQueue, WorkloadConfig, apportion_shrink, collect,
+                        generate, select_preemption_victims)
 
 # new-policy composites ride the same drain/conservation properties
 EXTRA_MECHANISMS = ("CUA&STEAL", "CUA&POOL")
@@ -112,6 +112,55 @@ def test_random_workload_drains_and_conserves_nodes(seed, mech):
         assert r.first_start is not None
         assert r.first_start >= r.job.submit_time - 1e-9
         assert r.completion >= r.first_start
+
+
+# --------------------------------------------- property: incremental queue
+@given(st.lists(st.tuples(st.sampled_from(("submit", "start", "preempt",
+                                           "requeue")),
+                          st.integers(0, 61), st.integers(0, 7)),
+                min_size=1, max_size=120))
+@settings(max_examples=200, deadline=None)
+def test_incremental_queue_matches_full_sort_under_interleavings(ops):
+    """The incremental WaitQueue yields exactly sorted(queue, key=order_key)
+    after every submit/start/preempt/requeue interleaving.  Priorities
+    change across requeues (a preempted job's order inputs may change,
+    e.g. est_remaining) — the structure recomputes keys at re-append, so
+    the full-sort oracle must agree at every step."""
+    prio = {}
+
+    def order_key(jid):
+        return (prio[jid], jid)  # builtin-style: jid-tiebroken total order
+
+    q = WaitQueue()
+    q.configure(order_key, incremental=True,
+                meta_fn=lambda jid: (float(jid), 0.0))
+    members = {}
+    next_jid = 0
+    for action, pick, p in ops:
+        if action == "submit":
+            jid = next_jid
+            next_jid += 1
+            prio[jid] = p
+            members[jid] = None
+            q.append(jid)
+        elif members:
+            jid = list(members)[pick % len(members)]
+            if action == "start":           # leaves the queue for good
+                del members[jid]
+                q.remove(jid)
+            elif action == "preempt":       # out, new priority, back in
+                q.remove(jid)
+                prio[jid] = (prio[jid] + 1 + p) % 11
+                q.append(jid)
+            else:                            # requeue: key change in place
+                prio[jid] = p
+                q.invalidate(jid)
+        assert list(q) == sorted(members, key=order_key)
+        assert len(q) == len(members)
+        for jid in members:
+            assert jid in q
+        # the cached backfill metas track the sorted order
+        assert q.meta_window(0, len(q))[0] == [float(j) for j in q]
 
 
 @given(seed=st.integers(0, 10_000),

@@ -1,0 +1,192 @@
+"""Deterministic units for the incremental engine containers
+(repro.core.structures) and the simulator behaviors layered on them
+(hold stealing, order-key invalidation, legacy-mode opt-out).
+
+The randomized equivalence property (incremental queue == full sort
+under arbitrary interleavings) lives in tests/test_properties.py behind
+the hypothesis importorskip.
+"""
+import pytest
+
+from repro.core import (JobSpec, JobType, OrderedSet, SimConfig, Simulator,
+                        WaitQueue, collect, register_policy,
+                        registered_policies)
+
+
+# ---------------------------------------------------------------- WaitQueue
+def _fifo_queue(**kw):
+    q = WaitQueue()
+    q.configure(lambda jid: (jid,), **kw)
+    return q
+
+
+def test_waitqueue_keeps_key_order_with_list_surface():
+    q = WaitQueue()
+    q.configure(lambda jid: (-jid,))  # descending jid order
+    for jid in (3, 1, 4, 2):
+        q.append(jid)
+    assert list(q) == [4, 3, 2, 1]
+    assert q[0] == 4 and q[1:3] == [3, 2]
+    assert len(q) == 4 and bool(q)
+    assert 3 in q and 9 not in q
+    assert q.position(2) == 2
+    q.remove(3)
+    assert list(q) == [4, 2, 1]
+    assert 3 not in q
+    assert list(reversed(q)) == [1, 2, 4]
+
+
+def test_waitqueue_rejects_duplicate_and_missing_members():
+    q = _fifo_queue()
+    q.append(1)
+    with pytest.raises(ValueError):
+        q.append(1)
+    with pytest.raises(KeyError):
+        q.remove(2)
+
+
+def test_waitqueue_invalidate_recomputes_key_and_is_noop_for_nonmembers():
+    prio = {1: 5, 2: 1, 3: 3}
+    q = WaitQueue()
+    q.configure(lambda jid: (prio[jid], jid))
+    for jid in (1, 2, 3):
+        q.append(jid)
+    assert list(q) == [2, 3, 1]
+    prio[1] = 0
+    q.invalidate(1)
+    assert list(q) == [1, 2, 3]
+    q.invalidate(99)  # non-member: no-op, no raise
+    assert list(q) == [1, 2, 3]
+
+
+def test_waitqueue_legacy_mode_sorts_stably_on_refresh():
+    # order_keys_stable=False policies get the legacy list semantics:
+    # appends stay unsorted until refresh(), which stable-sorts with
+    # freshly computed keys (ties keep their pre-sort order)
+    prio = {1: 1, 2: 0, 3: 1}
+    q = WaitQueue()
+    q.configure(lambda jid: (prio[jid],), incremental=False,
+                meta_fn=lambda jid: (float(jid), 0.0))
+    for jid in (1, 2, 3):
+        q.append(jid)
+    assert list(q) == [1, 2, 3]  # unsorted until a pass refreshes
+    q.refresh()
+    assert list(q) == [2, 1, 3]  # stable: 1 before 3 (tied keys)
+    prio[2] = 9
+    q.refresh()                  # keys recomputed every refresh
+    assert list(q) == [1, 3, 2]
+    assert q.meta_window(0, 3)[0] == [1.0, 3.0, 2.0]
+    q.remove(3)
+    assert list(q) == [1, 2]
+
+
+def test_waitqueue_meta_window_aligns_with_slices():
+    q = _fifo_queue(meta_fn=lambda jid: (jid * 10.0, jid * 100.0))
+    for jid in (2, 0, 1):
+        q.append(jid)
+    needs, ests = q.meta_window(0, 3)
+    assert needs == [0.0, 10.0, 20.0]
+    assert ests == [0.0, 100.0, 200.0]
+    assert q.meta_window(1, 3)[0] == [10.0, 20.0]
+
+
+# --------------------------------------------------------------- OrderedSet
+def test_ordered_set_is_ordered_with_o1_membership():
+    s = OrderedSet()
+    for x in (3, 1, 2, 1):
+        s.append(x)
+    assert list(s) == [3, 1, 2]  # first insertion wins, like guarded append
+    assert 1 in s and 9 not in s
+    assert len(s) == 3 and bool(s)
+    s.remove(1)
+    assert list(s) == [3, 2]
+    with pytest.raises(ValueError):
+        s.remove(1)
+    s.discard(1)  # missing member: no-op
+    s.discard(3)
+    assert list(s) == [2]
+    assert not OrderedSet()
+
+
+# --------------------------------------------- simulator: hold steal return
+def _batch(jid, submit, size, est=4000.0, act=2000.0):
+    return JobSpec(jid, JobType.RIGID, "p", submit, size, est, act)
+
+
+def test_steal_holds_insufficient_returns_zero_but_transfers_stand():
+    """Satellite: an insufficient steal returns 0 (the legacy identical-
+    arms conditional returned the shortfall anyway) so _schedule skips
+    the doomed _try_start retry; the transferred nodes stay free."""
+    sim = Simulator(SimConfig(n_nodes=100, mechanism="BASE"),
+                    [_batch(0, 0.0, 90), _batch(1, 10.0, 5)])
+    sim.queue.append(0)
+    sim.queue.append(1)
+    sim.ledger.occupied = 97          # synthetic: most of the machine busy
+    sim.ledger.free = 0
+    sim.ledger.add_hold(1, 3)         # job 1 holds 3 returned-lease nodes
+    sim.ledger.check()
+    moved = sim._steal_holds(0)       # head 0 needs 90, can reach only 3
+    assert moved == 0
+    assert sim.ledger.free == 3       # the transfer itself stands
+    assert sim.ledger.hold_of(1) == 0
+
+
+def test_steal_holds_sufficient_returns_moved_youngest_first():
+    sim = Simulator(SimConfig(n_nodes=100, mechanism="BASE"),
+                    [_batch(0, 0.0, 10), _batch(1, 10.0, 5),
+                     _batch(2, 20.0, 5)])
+    for jid in (0, 1, 2):
+        sim.queue.append(jid)
+    sim.ledger.occupied = 88
+    sim.ledger.free = 2
+    sim.ledger.add_hold(1, 5)
+    sim.ledger.add_hold(2, 5)
+    sim.ledger.check()
+    moved = sim._steal_holds(0)       # short 8: all of 2's, 3 of 1's
+    assert moved == 8
+    assert sim.ledger.free == 10
+    assert sim.ledger.hold_of(2) == 0
+    assert sim.ledger.hold_of(1) == 2
+
+
+def test_golden_behavior_unchanged_by_steal_fix():
+    """The steal-fix must not change outcomes: an insufficient steal's
+    _try_start would have failed anyway.  End-to-end: a hold-heavy
+    scenario completes with finite metrics."""
+    jobs = [JobSpec(0, JobType.MALLEABLE, "p", 0.0, 80, 8000.0, 4000.0,
+                    n_min=20),
+            JobSpec(1, JobType.ONDEMAND, "p", 100.0, 40, 400.0, 200.0),
+            _batch(2, 150.0, 90)]
+    sim = Simulator(SimConfig(n_nodes=100, mechanism="CUA&SPAA"), jobs)
+    sim.run()
+    m = collect(sim)
+    assert m.n_completed == m.n_jobs == 3
+
+
+# ------------------------------------------------- order_keys_stable opt-out
+def test_order_keys_stable_false_policy_gets_legacy_resort():
+    """A queue policy whose keys read the clock opts out of incremental
+    caching and still orders correctly (re-sorted every pass)."""
+    from repro.core.policies.builtin import FcfsEasyBackfill
+
+    name = "_TEST_UNSTABLE_LIFO"
+    if name not in registered_policies("queue"):
+        @register_policy("queue", name)
+        class UnstableLifo(FcfsEasyBackfill):
+            order_keys_stable = False
+
+            def order_key(self, view, jid):
+                # clock-dependent: age since submit, newest first
+                return (0 if view.od_front(jid) else 1,
+                        view.now - view.jobs[jid].submit_time, jid)
+
+    jobs = [_batch(0, 0.0, 60, est=400.0, act=200.0),
+            _batch(1, 10.0, 60, est=400.0, act=200.0),
+            _batch(2, 20.0, 60, est=400.0, act=200.0)]
+    sim = Simulator(SimConfig(n_nodes=60, mechanism="BASE",
+                              queue_policy=name), jobs)
+    assert not sim.queue.incremental
+    sim.run()
+    # newest-first: job 2 (smallest age) starts before job 1
+    assert sim.records[2].first_start < sim.records[1].first_start
+    assert all(r.completion is not None for r in sim.records.values())
