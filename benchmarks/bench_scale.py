@@ -1,0 +1,274 @@
+"""Year-scale streaming replay benchmarks (ROADMAP's "full-year, 100k+"
+rung).
+
+Two sections, both landing in results/bench/scale.json next to the
+legacy engine-wall-clock rows (benchmarks/bench_scheduler.bench_scale):
+
+  stream-identity   streaming mode (lazy source -> incremental arrival
+                    feed -> record sink) vs materialized mode on the
+                    600- and 6k-job tiers across BASE/CUA&SPAA: per-row
+                    sha256 digests of the *job trace* and of the
+                    *job-for-job outcome records* must match exactly.
+  full-year         a >= 100k-job, 365-day Theta-density replay through
+                    Experiment.run_stream, executed in a fresh
+                    subprocess per mode; the child samples its own
+                    VmRSS (/proc/self/statm) for the peak-RSS
+                    high-water, because ru_maxrss is fork-inherited
+                    from the parent on this kernel and would report the
+                    harness's footprint.  The streaming row documents
+                    the bounded-memory claim; the paired materialized
+                    row is the reference point.
+
+The year workload keeps the offered-load regime of the existing scale
+tiers (~1.05-1.15) at one-year density: ~300 jobs/day needs a smaller
+runtime median than the 2h default or a year of Theta-sized jobs would
+overflow the machine several times over.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import subprocess
+import sys
+import time
+from typing import List, Optional, Tuple
+
+from repro.core import SimConfig, Simulator, WorkloadConfig, generate
+from repro.core.workloads import ThetaGenerator, trace_sha256
+
+N_NODES = 4392  # Theta
+
+#: the full-year reference point: ~300 jobs/day for 365 days at offered
+#: load ~1.1 (runtime median tuned down so a year of arrivals fits the
+#: machine at the paper's load regime)
+YEAR_N_JOBS = 110_000
+YEAR_HORIZON_DAYS = 365.0
+YEAR_RUNTIME_MEDIAN_S = 1500.0
+
+
+def year_workload(n_jobs: int = YEAR_N_JOBS, seed: int = 0,
+                  horizon_days: Optional[float] = None) -> WorkloadConfig:
+    """The full-year workload, or a density-preserving scale-down of it
+    (horizon shrinks with n_jobs, so 20k jobs is a "quick year" at the
+    same arrival rate and load)."""
+    if horizon_days is None:
+        horizon_days = YEAR_HORIZON_DAYS * n_jobs / YEAR_N_JOBS
+    return WorkloadConfig(n_nodes=N_NODES, n_jobs=n_jobs,
+                          horizon_days=horizon_days, target_load=1.05,
+                          runtime_median_s=YEAR_RUNTIME_MEDIAN_S,
+                          notice_mix="W5", seed=seed)
+
+
+def _record_sha(records) -> str:
+    """Order-independent sha256 of the job-for-job outcome tuples —
+    comparable between a retained record dict and a sink's stream."""
+    recs = sorted((r.job.jid, r.first_start, r.completion, r.killed,
+                   r.n_preempted, r.n_shrunk, r.instant) for r in records)
+    return hashlib.sha256(repr(recs).encode()).hexdigest()
+
+
+# ---------------------------------------------------------- stream identity
+def bench_stream_identity(tiers: Tuple[Tuple[int, float], ...] = (
+        (600, 21.0), (6000, 210.0)),
+        mechanisms: Tuple[str, ...] = ("BASE", "CUA&SPAA"),
+        seed: int = 0) -> List[dict]:
+    """Per (tier x mechanism) row: sha256 of the generated job trace
+    (materialized ``generate`` vs lazy ``iter_jobs``) and of the
+    simulated outcome records (retained dict vs record sink).  Both
+    must match bit-for-bit — the acceptance gate for swapping the
+    data-flow mode freely."""
+    rows = []
+    for n_jobs, horizon_days in tiers:
+        wl = WorkloadConfig(n_nodes=N_NODES, n_jobs=n_jobs,
+                            horizon_days=horizon_days, target_load=1.15,
+                            notice_mix="W5", seed=seed)
+        jobs = generate(wl)
+        jobs_sha = trace_sha256(jobs)
+        # one generator instance: iter_jobs() re-yields from its memoized
+        # columns, so the trace is sampled once, not once per mechanism
+        gen = ThetaGenerator(wl)
+        stream_jobs_sha = trace_sha256(gen.iter_jobs())
+        for mech in mechanisms:
+            cfg = SimConfig(n_nodes=N_NODES, mechanism=mech)
+            mat = Simulator(cfg, list(jobs))
+            t0 = time.perf_counter()
+            mat.run()
+            mat_s = time.perf_counter() - t0
+            mat_sha = _record_sha(mat.records.values())
+
+            retired: List = []
+            stream = Simulator(cfg, gen.iter_jobs(),
+                               record_sink=retired.append)
+            t0 = time.perf_counter()
+            stream.run()
+            stream_s = time.perf_counter() - t0
+            stream_sha = _record_sha(retired)
+            rows.append({
+                "name": f"stream_identity_{n_jobs}job_{mech}",
+                "n_jobs": n_jobs, "mechanism": mech, "seed": seed,
+                "job_sha256": jobs_sha,
+                "jobs_match": bool(jobs_sha == stream_jobs_sha),
+                "record_sha256": mat_sha,
+                "records_match": bool(mat_sha == stream_sha),
+                "seconds": round(stream_s, 3),
+                "materialized_seconds": round(mat_s, 3),
+                "derived": (f"jobs {'==' if jobs_sha == stream_jobs_sha else '!='} "
+                            f"records {'==' if mat_sha == stream_sha else '!='} "
+                            f"({stream_s:.2f}s vs {mat_s:.2f}s)")})
+    return rows
+
+
+# -------------------------------------------------------------- full year
+_YEAR_SCRIPT = """\
+import json, os, sys, threading, time
+from benchmarks.bench_scale import year_workload
+from repro.core import Experiment
+
+# Peak RSS by sampling VmRSS (/proc/self/statm): ru_maxrss is useless
+# here — a child forked from a large benchmark harness inherits the
+# parent's resident high-water on this kernel, so the measured process
+# must track its *own* resident set while it runs.
+PAGE_MB = os.sysconf("SC_PAGE_SIZE") / 1048576.0
+peak = [0.0]
+stop = threading.Event()
+
+def _rss_mb():
+    try:
+        with open("/proc/self/statm") as f:
+            return int(f.read().split()[1]) * PAGE_MB
+    except OSError:            # non-procfs platform: resource fallback
+        import resource
+        return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+def _sampler():
+    while not stop.is_set():
+        peak[0] = max(peak[0], _rss_mb())
+        stop.wait(0.02)
+
+threading.Thread(target=_sampler, daemon=True).start()
+
+cfg = json.loads(sys.argv[1])
+wl = year_workload(cfg["n_jobs"], seed=cfg["seed"])
+exp = Experiment(mechanisms=(cfg["mechanism"],), workloads=(wl,),
+                 seeds=(cfg["seed"],), processes=1,
+                 stream=cfg["stream"])
+t0 = time.perf_counter()
+rows = [r for r in exp.run_stream()]
+seconds = time.perf_counter() - t0
+stop.set()
+peak[0] = max(peak[0], _rss_mb())
+m = rows[0].metrics
+print(json.dumps({
+    "seconds": seconds,
+    "peak_rss_mb": peak[0],
+    "n_jobs": m.n_jobs, "n_completed": m.n_completed,
+    "avg_turnaround_h": m.avg_turnaround_h,
+    "system_utilization": m.system_utilization}))
+"""
+
+
+def _year_subprocess(n_jobs: int, mechanism: str, seed: int,
+                     stream: bool, timeout: float = 3600.0
+                     ) -> Optional[dict]:
+    """One full-year replay in a fresh interpreter (self-sampled VmRSS).
+
+    Returns None only when subprocesses themselves are unavailable
+    (OSError spawning).  A child that *crashes*, times out, or prints
+    garbage is a genuine engine failure and raises RuntimeError with
+    the child's stderr — it must never be silently re-labelled as
+    "no subprocess support"."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(root, "src"), root,
+                    env.get("PYTHONPATH")) if p)
+    params = json.dumps({"n_jobs": n_jobs, "mechanism": mechanism,
+                         "seed": seed, "stream": stream})
+    try:
+        out = subprocess.run([sys.executable, "-c", _YEAR_SCRIPT, params],
+                             capture_output=True, text=True, check=True,
+                             env=env, timeout=timeout)
+    except OSError:
+        return None  # cannot spawn at all: caller measures in-process
+    except subprocess.CalledProcessError as e:
+        raise RuntimeError(
+            f"full-year {'stream' if stream else 'materialized'} replay "
+            f"subprocess failed (exit {e.returncode}); stderr tail:\n"
+            f"{(e.stderr or '')[-2000:]}") from None
+    except subprocess.TimeoutExpired:
+        raise RuntimeError(
+            f"full-year {'stream' if stream else 'materialized'} replay "
+            f"did not finish within {timeout}s") from None
+    try:
+        return json.loads(out.stdout.strip().splitlines()[-1])
+    except (ValueError, IndexError):
+        raise RuntimeError(
+            "full-year replay subprocess printed no result row; stdout "
+            f"tail:\n{out.stdout[-2000:]}") from None
+
+
+def bench_full_year(n_jobs: int = YEAR_N_JOBS, mechanism: str = "CUA&SPAA",
+                    seed: int = 0, compare_materialized: bool = True
+                    ) -> List[dict]:
+    """The full-year rung: a >= 100k-job replay through
+    ``Experiment.run_stream`` with the peak-RSS high-water of each data
+    flow measured in its own subprocess.  Falls back to an in-process
+    streaming run (RSS reported as the parent's, labelled) when
+    subprocesses are unavailable."""
+    wl = year_workload(n_jobs, seed=seed)
+    label = f"year_{n_jobs}job_{wl.horizon_days:g}d"
+    rows = []
+    stream_res = _year_subprocess(n_jobs, mechanism, seed, stream=True)
+    in_process = stream_res is None
+    if in_process:  # no subprocess support: measure in-process, loudly
+        import resource
+        from repro.core import Experiment
+        exp = Experiment(mechanisms=(mechanism,), workloads=(wl,),
+                         seeds=(seed,), processes=1, stream=True)
+        t0 = time.perf_counter()
+        results = list(exp.run_stream())
+        m = results[0].metrics
+        stream_res = {
+            "seconds": time.perf_counter() - t0,
+            "peak_rss_mb": resource.getrusage(
+                resource.RUSAGE_SELF).ru_maxrss / 1024.0,
+            "n_jobs": m.n_jobs, "n_completed": m.n_completed,
+            "avg_turnaround_h": m.avg_turnaround_h,
+            "system_utilization": m.system_utilization}
+    def _res_cols(res: dict) -> dict:
+        # n_jobs stays the REQUESTED trace length (the sink-counted one
+        # goes to n_jobs_simulated), so run.py's lost-job gate compares
+        # retired records against the ask instead of against itself
+        out = {k: (round(v, 3) if isinstance(v, float) else v)
+               for k, v in res.items() if k != "n_jobs"}
+        out["n_jobs_simulated"] = res["n_jobs"]
+        return out
+
+    row = {"name": f"{label}_stream", "n_jobs": n_jobs,
+           "horizon_days": wl.horizon_days, "mechanism": mechanism,
+           "seed": seed, "mode": "stream",
+           "rss_source": ("parent process ru_maxrss (no subprocess "
+                          "support)" if in_process
+                          else "subprocess VmRSS sampling"),
+           **_res_cols(stream_res)}
+    rows.append(row)
+    if compare_materialized and not in_process:
+        mat_res = _year_subprocess(n_jobs, mechanism, seed, stream=False)
+        if mat_res is not None:
+            rows.append({"name": f"{label}_materialized", "n_jobs": n_jobs,
+                         "horizon_days": wl.horizon_days,
+                         "mechanism": mechanism, "seed": seed,
+                         "mode": "materialized",
+                         "rss_source": "subprocess VmRSS sampling",
+                         **_res_cols(mat_res)})
+            row["rss_vs_materialized"] = round(
+                stream_res["peak_rss_mb"] / max(mat_res["peak_rss_mb"], 1e-9),
+                3)
+    for r in rows:
+        r["derived"] = (f"{r['seconds']}s, peak RSS {r['peak_rss_mb']:.0f}MB"
+                        + (f" ({row['rss_vs_materialized']:.0%} of "
+                           "materialized)"
+                           if r is row and "rss_vs_materialized" in row
+                           else ""))
+    return rows

@@ -7,6 +7,8 @@
   dispatch     -> policy-API overhead vs the pre-refactor seed
   scale        -> incremental-engine wall clock 600 -> 6k -> 50k jobs,
                   paired against the pre-PR O(n log n)-per-event engine
+                  (the streaming-identity and full-year rows live in
+                  benchmarks/bench_scale.py)
 
 Each returns a list of row dicts; run.py prints them and asserts the
 paper's qualitative observations (Obs 1-13) where they are trace-robust.

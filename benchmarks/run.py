@@ -11,14 +11,19 @@ writes the full row dicts to results/bench/*.json.  Sections:
   scenarios   scenario presets x mechanisms         (docs/workloads.md)
   obs10       decision latency                      (paper Obs 10)
   dispatch    policy-API overhead vs seed           (BENCH_scheduler.json)
-  scale       engine wall clock 600 -> 6k -> 50k    (results/bench/scale.json
-                                                     + BENCH_scheduler.json)
+  scale       engine wall clock 600 -> 6k -> 50k,   (results/bench/scale.json
+              streaming==materialized sha gates,     + BENCH_scheduler.json)
+              and the full-year streaming rung
+              with per-mode peak RSS
   roofline    per (arch x shape) roofline terms     (EXPERIMENTS §Roofline)
 
 Scale tiers: --quick runs (600, 2k) with the paired pre-PR baseline at
 600 jobs; the default adds the 6k steady-load and month-dense pairs
 (the latter gates the >= 10x speedup acceptance); --full adds the
-50k-job Theta-scale sweep.
+50k-job Theta-scale sweep.  Every mode appends the streaming-identity
+sha rows and a full-year streaming replay (benchmarks/bench_scale: 110k
+jobs/365d, or a density-preserving 20k "quick year" under --quick) with
+per-mode peak RSS.
 """
 from __future__ import annotations
 
@@ -29,7 +34,7 @@ import subprocess
 import sys
 import time
 
-from . import bench_decision, bench_roofline, bench_scheduler
+from . import bench_decision, bench_roofline, bench_scale, bench_scheduler
 
 OUT = "results/bench"
 
@@ -162,16 +167,35 @@ def main(argv=None) -> int:
             baseline_max = 6000
         rows = bench_scheduler.bench_scale(scales=scales,
                                            baseline_max_jobs=baseline_max)
+        # streaming == materialized identity tiers + the full-year rung
+        # (scaled-down 20k "quick year" under --quick; see bench_scale)
+        identity_tiers = ((600, 21.0),) if args.quick \
+            else ((600, 21.0), (6000, 210.0))
+        rows += bench_scale.bench_stream_identity(tiers=identity_tiers)
+        rows += bench_scale.bench_full_year(
+            n_jobs=20_000 if args.quick else bench_scale.YEAR_N_JOBS)
         _emit("scale", rows, t0,
               dict(prov, seeds=[0],
                    note="n_jobs varies per row; see each row"))
         for r in rows:
-            if r.get("records_match") is False:
-                fail = (f"scale: {r['name']} records diverge from the "
-                        f"pre-PR engine")
+            if r.get("jobs_match") is False:
+                fail = (f"scale: {r['name']} streamed job trace diverges "
+                        "from the materialized trace")
                 print(f"VALIDATION-FAIL,{fail}", file=sys.stderr)
                 failures.append(fail)
-            if r["decision_p99_ms"] is not None \
+            if r.get("mode") == "stream" and r.get("n_completed") is not None \
+                    and r["n_completed"] < r["n_jobs"]:
+                fail = (f"scale: {r['name']} completed only "
+                        f"{r['n_completed']}/{r['n_jobs']} jobs")
+                print(f"VALIDATION-FAIL,{fail}", file=sys.stderr)
+                failures.append(fail)
+        for r in rows:
+            if r.get("records_match") is False:
+                fail = (f"scale: {r['name']} records diverge from the "
+                        f"paired reference run")
+                print(f"VALIDATION-FAIL,{fail}", file=sys.stderr)
+                failures.append(fail)
+            if r.get("decision_p99_ms") is not None \
                     and not r["decision_within_bound"]:
                 fail = (f"scale: {r['name']} decision p99 "
                         f"{r['decision_p99_ms']}ms > 10ms bound")

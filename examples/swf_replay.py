@@ -3,16 +3,25 @@
     PYTHONPATH=src python examples/swf_replay.py                    # sample trace
     PYTHONPATH=src python examples/swf_replay.py --trace theta.swf --mix W2
     PYTHONPATH=src python examples/swf_replay.py --load-scale 1.3
+    PYTHONPATH=src python examples/swf_replay.py --stream --max-rss  # year-scale
 
 Real traces (e.g. from the Parallel Workloads Archive) carry no
 job-type/notice labels, so the "swf" workload source annotates them with
 the paper's §IV-A rules (per-project types, Table III notice mixes) —
 see docs/workloads.md.  Scenario transforms stack on the replay:
 ``--load-scale 1.3`` compresses arrivals to 1.3x offered load.
+
+``--stream`` runs every cell in bounded memory (chunked SWF scan, lazy
+JobSpec construction, incremental arrival feed, streaming metrics) with
+a per-run progress line — the mode for year-scale archive traces, where
+materializing the trace per (mechanism x seed) cell would dominate RAM.
+``--max-rss`` prints the process peak RSS at exit, so the example
+doubles as a memory smoke check (docs/performance.md).
 """
 import argparse
 import os
 import sys
+import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
@@ -37,19 +46,39 @@ def main():
                     help="number of annotation seeds to average")
     ap.add_argument("--serial", action="store_true",
                     help="disable the multiprocessing fan-out")
+    ap.add_argument("--stream", action="store_true",
+                    help="bounded-memory replay (lazy trace + record "
+                         "sink) with a per-run progress line")
+    ap.add_argument("--max-rss", action="store_true",
+                    help="print the peak RSS at exit (memory smoke check)")
     args = ap.parse_args()
 
     transforms = []
     if args.load_scale:
         transforms.append(("load_scale", {"factor": args.load_scale}))
-    scenario = Scenario("swf",
-                        params={"path": args.trace, "notice_mix": args.mix,
-                                "frac_od_projects": args.frac_od},
+    params = {"path": args.trace, "notice_mix": args.mix,
+              "frac_od_projects": args.frac_od}
+    if args.stream:
+        params["stream"] = True  # chunked scan, no record-dict parse
+    scenario = Scenario("swf", params=params,
                         transforms=tuple(transforms), name="trace-replay")
     exp = Experiment(mechanisms=args.mechanisms.split(","),
                      workloads=(scenario,), seeds=range(args.seeds),
-                     processes=1 if args.serial else None)
-    result = exp.run()
+                     processes=1 if args.serial else None,
+                     stream=args.stream)
+    if args.stream:
+        results, n_runs = [], len(args.mechanisms.split(",")) * args.seeds
+        t0 = time.perf_counter()
+        for r in exp.run_stream():
+            results.append(r)
+            print(f"[{len(results)}/{n_runs}] {r.spec.mechanism} "
+                  f"seed={r.spec.seed}: {r.metrics.n_completed}/"
+                  f"{r.metrics.n_jobs} jobs in {r.elapsed_s:.1f}s "
+                  f"({time.perf_counter() - t0:.1f}s total)", flush=True)
+        from repro.core.experiment import ExperimentResult
+        result = ExperimentResult(results)
+    else:
+        result = exp.run()
     rows = result.mean(("mechanism",))
     print(f"trace: {args.trace} (mix={args.mix}, frac_od={args.frac_od}"
           + (f", load x{args.load_scale}" if args.load_scale else "") + ")")
@@ -62,6 +91,11 @@ def main():
               f"{row['system_utilization']:6.3f} "
               f"{row['od_instant_start_rate']:8.2f} "
               f"{row['n_completed']:5.0f}")
+    if args.max_rss:
+        import resource
+        rss_mb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+        print(f"peak RSS: {rss_mb:.0f} MB (self"
+              + ("" if args.serial else "; worker processes excluded") + ")")
 
 
 if __name__ == "__main__":

@@ -53,14 +53,16 @@ from .policy import (ARRIVAL_POLICIES, MECHANISMS, NOTICE_POLICIES,
                      registered_policies, resolve_mechanism)
 from .simulator import JobRecord, SimConfig, Simulator
 from .workloads import (NOTICE_MIXES, Scenario, ScenarioTransform,
-                        SwfTrace, ThetaGenerator, UnknownWorkloadError,
-                        WorkloadConfig, WorkloadDataError, WorkloadSource,
-                        daly_interval, generate, get_scenario, get_source,
-                        get_transform, notice_mix, register_scenario,
-                        register_source, register_transform,
-                        registered_scenarios, registered_sources,
-                        registered_transforms)
-from .metrics import Metrics, collect, summarize_records
+                        SwfTrace, ThetaGenerator, TraceStats,
+                        UnknownWorkloadError, WorkloadConfig,
+                        WorkloadDataError, WorkloadSource, daly_interval,
+                        generate, get_scenario, get_source, get_transform,
+                        notice_mix, register_scenario, register_source,
+                        register_transform, registered_scenarios,
+                        registered_sources, registered_transforms,
+                        trace_sha256)
+from .metrics import (Metrics, StreamingMetrics, collect,
+                      summarize_records)
 from .experiment import Experiment, ExperimentResult, RunResult, RunSpec
 
 
@@ -87,10 +89,12 @@ __all__ = [
     "NOTICE_MIXES", "WorkloadConfig", "daly_interval", "generate",
     "notice_mix",
     "WorkloadSource", "ScenarioTransform", "Scenario", "SwfTrace",
-    "ThetaGenerator", "UnknownWorkloadError", "WorkloadDataError",
+    "ThetaGenerator", "TraceStats", "UnknownWorkloadError",
+    "WorkloadDataError", "trace_sha256",
     "get_source", "get_transform", "get_scenario",
     "register_source", "register_transform", "register_scenario",
     "registered_sources", "registered_transforms", "registered_scenarios",
-    "Metrics", "collect", "summarize_records", "run_mechanism",
+    "Metrics", "StreamingMetrics", "collect", "summarize_records",
+    "run_mechanism",
     "Experiment", "ExperimentResult", "RunResult", "RunSpec",
 ]

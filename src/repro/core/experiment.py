@@ -39,6 +39,8 @@ definition serves 600-job CI smokes and 50k-job scale runs alike
 """
 from __future__ import annotations
 
+import hashlib
+import json
 import logging
 import os
 import time
@@ -48,11 +50,11 @@ from typing import Dict, Iterator, List, Mapping, Optional, Sequence, Tuple, \
 
 import numpy as np
 
-from .metrics import Metrics, collect, summarize_records
+from .metrics import Metrics, StreamingMetrics, collect, summarize_records
 from .policy import UnknownPolicyError, resolve_mechanism
 from .simulator import SimConfig, Simulator
-from .workloads import Scenario, UnknownWorkloadError, WorkloadConfig, \
-    generate, get_scenario, notice_mix
+from .workloads import Scenario, ThetaGenerator, UnknownWorkloadError, \
+    WorkloadConfig, generate, get_scenario, notice_mix
 
 log = logging.getLogger(__name__)
 
@@ -70,6 +72,10 @@ class RunSpec:
     sim_kw: Tuple[Tuple[str, object], ...] = ()  # frozen SimConfig overrides
     #: max records in the worker's down-sampled summary (0 = no summary)
     summary_records: int = 0
+    #: bounded-memory run: lazy trace (Scenario.iter_realize / theta
+    #: iter_jobs), arrivals fed to the simulator incrementally, records
+    #: retired through a StreamingMetrics sink
+    stream: bool = False
 
     def key(self, names: Sequence[str]) -> tuple:
         """Group key: each name is a RunSpec field, a workload field, or —
@@ -106,6 +112,21 @@ def _execute(spec: RunSpec) -> RunResult:
     """Top-level so process pools can pickle it."""
     t0 = time.perf_counter()
     wl = spec.workload
+    if spec.stream:
+        if isinstance(wl, Scenario):
+            jobs, n_nodes = wl.iter_realize(seed=spec.seed)
+        else:
+            wcfg = replace(wl, seed=spec.seed)
+            jobs = ThetaGenerator(wcfg).iter_jobs()
+            n_nodes = wcfg.n_nodes
+        cfg = SimConfig(n_nodes=n_nodes, mechanism=spec.mechanism,
+                        **dict(spec.sim_kw))
+        sink = StreamingMetrics(instant_eps=cfg.instant_eps)
+        sim = Simulator(cfg, jobs, record_sink=sink)
+        sim.run()
+        summary = sink.summary() if spec.summary_records else None
+        return RunResult(spec, sink.result(sim),
+                         elapsed_s=time.perf_counter() - t0, summary=summary)
     if isinstance(wl, Scenario):
         jobs, n_nodes = wl.realize(seed=spec.seed)
     else:
@@ -141,6 +162,11 @@ class Experiment:
     #: > 0: each worker also returns metrics.summarize_records(...) with
     #: at most this many sampled per-job tuples (RunResult.summary)
     record_summary: int = 0
+    #: run every cell in bounded memory: lazy traces, incremental
+    #: arrival feed, StreamingMetrics record sink (year-scale replays).
+    #: Identical job-for-job simulation; metric means match to float
+    #: accumulation order, record summaries become sketch-backed.
+    stream: bool = False
 
     def _scaled(self, wl: Union[WorkloadConfig, Scenario]
                 ) -> Union[WorkloadConfig, Scenario]:
@@ -165,7 +191,7 @@ class Experiment:
             for mech in self.mechanisms:
                 for seed in self.seeds:
                     yield RunSpec(mech, wl, seed, frozen_kw,
-                                  self.record_summary)
+                                  self.record_summary, self.stream)
 
     def _validated_specs(self) -> List[RunSpec]:
         # fail fast on typos with the registry-listing ValueError (worker
@@ -183,14 +209,21 @@ class Experiment:
                 notice_mix(spec.workload.notice_mix)
         return specs
 
-    def _stream(self) -> Iterator[Tuple[int, RunResult]]:
-        """Yield (grid index, RunResult) as runs complete."""
-        specs = self._validated_specs()
+    def _stream(self, skip: Sequence[int] = (),
+                specs: Optional[List[RunSpec]] = None
+                ) -> Iterator[Tuple[int, RunResult]]:
+        """Yield (grid index, RunResult) as runs complete; grid indices
+        in ``skip`` (checkpoint-restored) are not executed.  ``specs``
+        lets callers that already validated the grid skip a re-pass."""
+        if specs is None:
+            specs = self._validated_specs()
         n = self.processes
         if n is None:
             n = min(len(specs), os.cpu_count() or 1)
-        pending = dict(enumerate(specs))
-        if n > 1 and len(specs) > 1:
+        pending = {i: s for i, s in enumerate(specs) if i not in set(skip)}
+        if not pending:
+            return
+        if n > 1 and len(pending) > 1:
             try:
                 from concurrent.futures import ProcessPoolExecutor, \
                     as_completed
@@ -229,10 +262,55 @@ class Experiment:
         for i, s in sorted(pending.items()):
             yield i, _execute(s)
 
-    def run_stream(self) -> Iterator[RunResult]:
+    @staticmethod
+    def _grid_key(specs: List[RunSpec]) -> str:
+        """Fingerprint of the sweep definition, stored in checkpoints so
+        a progress file is never resumed against a different grid."""
+        parts = [repr(s) for s in specs]
+        return hashlib.sha256("\n".join(parts).encode()).hexdigest()[:16]
+
+    def run_stream(self, checkpoint: Optional[str] = None
+                   ) -> Iterator[RunResult]:
         """Yield each RunResult as it completes (streaming aggregation:
-        nothing is retained for finished runs)."""
-        for _i, result in self._stream():
+        nothing is retained for finished runs).
+
+        ``checkpoint`` names a JSON progress file for long replays: each
+        completed run is recorded (atomically rewritten) as it finishes,
+        and a re-run with the same sweep definition yields the recorded
+        results immediately — restored RunResults carry their saved
+        metrics/elapsed but no record summary — then executes only the
+        missing cells.  A checkpoint written by a *different* grid is
+        refused (ValueError) rather than silently misapplied.
+        """
+        if checkpoint is None:
+            for _i, result in self._stream():
+                yield result
+            return
+        specs = self._validated_specs()  # validated once, reused throughout
+        key = self._grid_key(specs)
+        done: Dict[int, dict] = {}
+        if os.path.exists(checkpoint):
+            with open(checkpoint) as f:
+                saved = json.load(f)
+            if saved.get("grid_key") != key:
+                raise ValueError(
+                    f"checkpoint {checkpoint!r} belongs to a different "
+                    f"sweep (grid_key {saved.get('grid_key')!r} != {key!r}); "
+                    "delete it or point elsewhere")
+            done = {int(i): row for i, row in saved.get("runs", {}).items()}
+        for i, row in sorted(done.items()):
+            yield RunResult(specs[i], Metrics(**row["metrics"]),
+                            elapsed_s=row.get("elapsed_s", 0.0))
+        for i, result in self._stream(skip=tuple(done), specs=specs):
+            done[i] = {"metrics": result.metrics.as_dict(),
+                       "elapsed_s": result.elapsed_s}
+            tmp = checkpoint + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump({"grid_key": key,
+                           "n_specs": len(specs),
+                           "runs": {str(k): v for k, v in done.items()}},
+                          f, indent=1)
+            os.replace(tmp, checkpoint)
             yield result
 
     def run(self) -> "ExperimentResult":

@@ -1,4 +1,16 @@
-"""Evaluation metrics (paper §IV-D) and streaming record summaries."""
+"""Evaluation metrics (paper §IV-D), streaming record summaries, and the
+incremental (bounded-memory) aggregation used by year-scale replays.
+
+Two aggregation paths produce the same :class:`Metrics` schema:
+
+* :func:`collect` — post-hoc over ``sim.records`` (the legacy path;
+  requires every JobRecord retained);
+* :class:`StreamingMetrics` — a record *sink* (see
+  ``Simulator(record_sink=...)``): means via Welford accumulators and
+  quantiles via P² sketches, O(1) state per metric regardless of trace
+  length.  Means are float-accurate to accumulation order; the
+  P² quantiles are approximate (see docs/performance.md).
+"""
 from __future__ import annotations
 
 from dataclasses import dataclass
@@ -69,6 +81,204 @@ def summarize_records(records: Mapping[int, JobRecord],
             "turnaround_s": _pcts(turns),
             "wait_s": _pcts(waits),
             "sample": sample}
+
+
+# ---------------------------------------------------- incremental primitives
+class Welford:
+    """Numerically stable streaming mean/variance (Welford 1962)."""
+
+    __slots__ = ("n", "mean", "_m2")
+
+    def __init__(self) -> None:
+        self.n = 0
+        self.mean = 0.0
+        self._m2 = 0.0
+
+    def add(self, x: float) -> None:
+        self.n += 1
+        delta = x - self.mean
+        self.mean += delta / self.n
+        self._m2 += delta * (x - self.mean)
+
+    @property
+    def variance(self) -> float:
+        return self._m2 / self.n if self.n else float("nan")
+
+    def result(self) -> float:
+        return self.mean if self.n else float("nan")
+
+
+class P2Quantile:
+    """The P² streaming quantile estimator (Jain & Chlamtac 1985).
+
+    Five markers track the running ``p``-quantile in O(1) memory; exact
+    below five observations, approximate after (parabolic marker
+    adjustment).  Accuracy is excellent for the mid quantiles and
+    degrades gracefully in the tails — the docs carry the caveat.
+    """
+
+    __slots__ = ("p", "_q", "_n", "_np", "_dn", "count")
+
+    def __init__(self, p: float):
+        assert 0.0 < p < 1.0
+        self.p = p
+        self.count = 0
+        self._q: List[float] = []           # marker heights
+        self._n = [0, 1, 2, 3, 4]           # marker positions (0-based)
+        self._np = [0.0, 2 * p, 4 * p, 2 + 2 * p, 4.0]  # desired positions
+        self._dn = [0.0, p / 2, p, (1 + p) / 2, 1.0]
+
+    def add(self, x: float) -> None:
+        self.count += 1
+        q, n = self._q, self._n
+        if self.count <= 5:
+            q.append(x)
+            q.sort()
+            return
+        # locate cell k and clamp the extremes
+        if x < q[0]:
+            q[0] = x
+            k = 0
+        elif x >= q[4]:
+            q[4] = x
+            k = 3
+        else:
+            k = 0
+            while k < 3 and x >= q[k + 1]:
+                k += 1
+        for i in range(k + 1, 5):
+            n[i] += 1
+        for i in range(5):
+            self._np[i] += self._dn[i]
+        # adjust the three middle markers toward their desired positions
+        for i in (1, 2, 3):
+            d = self._np[i] - n[i]
+            if (d >= 1 and n[i + 1] - n[i] > 1) or \
+                    (d <= -1 and n[i - 1] - n[i] < -1):
+                d = 1 if d > 0 else -1
+                # parabolic (P²) candidate, linear fallback
+                qi = q[i] + d / (n[i + 1] - n[i - 1]) * (
+                    (n[i] - n[i - 1] + d) * (q[i + 1] - q[i])
+                    / (n[i + 1] - n[i])
+                    + (n[i + 1] - n[i] - d) * (q[i] - q[i - 1])
+                    / (n[i] - n[i - 1]))
+                if not q[i - 1] < qi < q[i + 1]:
+                    qi = q[i] + d * (q[i + d] - q[i]) / (n[i + d] - n[i])
+                q[i] = qi
+                n[i] += d
+
+    def result(self) -> float:
+        if self.count == 0:
+            return float("nan")
+        if self.count <= 5:
+            return float(np.percentile(np.asarray(self._q), self.p * 100))
+        return self._q[2]
+
+
+class StreamingMetrics:
+    """Incremental :class:`Metrics` aggregation — the record sink for
+    ``Simulator(record_sink=...)``.
+
+    Call it with each retired :class:`JobRecord`; after ``sim.run()``,
+    :meth:`result` returns the same Metrics schema :func:`collect`
+    produces (means bit-comparable up to accumulation order, quantile
+    summaries approximate), and :meth:`summary` the percentile summary
+    ``summarize_records`` would have built — all in O(1) memory.
+
+    ``instant_eps`` mirrors ``SimConfig.instant_eps`` (the sink cannot
+    re-derive it from retired records).
+    """
+
+    def __init__(self, instant_eps: float = 1.0):
+        self.instant_eps = instant_eps
+        self.turn = {t: Welford() for t in JobType}
+        self.turn_all = Welford()
+        self.seen = {t: 0 for t in JobType}
+        self.completed = 0
+        self.od_instant = 0
+        self.preempted = {t: 0 for t in JobType}
+        self.shrunk_malleable = 0
+        self.first_submit = float("inf")
+        self.turn_q = {p: P2Quantile(p) for p in (0.50, 0.90, 0.99)}
+        self.wait_q = {p: P2Quantile(p) for p in (0.50, 0.90, 0.99)}
+
+    @property
+    def n_records(self) -> int:
+        return sum(self.seen.values())
+
+    def __call__(self, rec: JobRecord) -> None:
+        job = rec.job
+        self.seen[job.jtype] += 1
+        self.first_submit = min(self.first_submit, job.submit_time)
+        if rec.completion is not None:
+            self.completed += 1
+        t = rec.turnaround
+        if t is not None:
+            self.turn[job.jtype].add(t)
+            self.turn_all.add(t)
+            for q in self.turn_q.values():
+                q.add(t)
+        if rec.first_start is not None:
+            wait = rec.first_start - job.submit_time
+            for q in self.wait_q.values():
+                q.add(wait)
+            if job.jtype is JobType.ONDEMAND and wait <= self.instant_eps:
+                self.od_instant += 1
+        if rec.n_preempted > 0:
+            self.preempted[job.jtype] += 1
+        if job.jtype is JobType.MALLEABLE and rec.n_shrunk > 0:
+            self.shrunk_malleable += 1
+
+    @staticmethod
+    def _ratio(num: int, den: int) -> float:
+        return num / den if den else float("nan")
+
+    def result(self, sim: Simulator) -> Metrics:
+        """Finalize against the finished simulator (utilization needs its
+        node-seconds integrals; decision times live there too)."""
+        dec = None
+        if sim.decision_times:
+            dec = float(np.percentile(
+                np.array(sim.decision_times) * 1e3, 99))
+        n = self.n_records
+        if n == 0:
+            nan = float("nan")
+            return Metrics(nan, nan, nan, nan, nan, nan, nan, nan, nan,
+                           n_completed=0, n_jobs=0, decision_p99_ms=dec)
+        horizon = sim.finish_time() - self.first_submit
+        useful = sim.occupied_integral - sim.waste_node_seconds
+        util = useful / (sim.cfg.n_nodes * horizon) if horizon > 0 \
+            else float("nan")
+        return Metrics(
+            avg_turnaround_h=self.turn_all.result() / 3600.0,
+            avg_turnaround_rigid_h=self.turn[JobType.RIGID].result() / 3600.0,
+            avg_turnaround_malleable_h=(
+                self.turn[JobType.MALLEABLE].result() / 3600.0),
+            avg_turnaround_od_h=self.turn[JobType.ONDEMAND].result() / 3600.0,
+            system_utilization=util,
+            od_instant_start_rate=self._ratio(self.od_instant,
+                                              self.seen[JobType.ONDEMAND]),
+            preemption_ratio_rigid=self._ratio(
+                self.preempted[JobType.RIGID], self.seen[JobType.RIGID]),
+            preemption_ratio_malleable=self._ratio(
+                self.preempted[JobType.MALLEABLE],
+                self.seen[JobType.MALLEABLE]),
+            shrink_ratio_malleable=self._ratio(
+                self.shrunk_malleable, self.seen[JobType.MALLEABLE]),
+            n_completed=self.completed,
+            n_jobs=n,
+            decision_p99_ms=dec,
+        )
+
+    def summary(self) -> dict:
+        """The shape of :func:`summarize_records` with sketch-backed
+        percentiles and no per-job sample (those records are gone)."""
+        def _pcts(qs: Dict[float, P2Quantile]) -> dict:
+            return {f"p{round(p * 100)}": qs[p].result() for p in qs}
+        return {"n_records": self.n_records, "sample_stride": 0,
+                "turnaround_s": _pcts(self.turn_q),
+                "wait_s": _pcts(self.wait_q),
+                "sample": [], "approximate_quantiles": True}
 
 
 def collect(sim: Simulator) -> Metrics:

@@ -28,7 +28,7 @@ import itertools
 import math
 import time as _walltime
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, Iterable, List, Optional, Tuple
 
 from .cluster import Lease, NodeLedger
 from .job import JobSpec, JobType, NoticeKind, RunState
@@ -48,6 +48,14 @@ class SimConfig:
     instant_eps: float = 1.0              # wait <= eps counts as instant start
     track_decision_time: bool = False
     queue_policy: str = "EASY"            # registered QueuePolicy name
+    #: streaming ingestion horizon (s): when jobs arrive as an iterator,
+    #: every job with submit_time within this window of the next event is
+    #: ingested before the event runs, so advance-notice events (which
+    #: precede their job's arrival by the notice lead) are never pushed
+    #: into the past.  Must exceed the workload's largest notice lead +
+    #: late window; the default covers the paper's minutes-scale leads
+    #: with a wide margin while keeping the ingested-ahead set small.
+    arrival_lookahead: float = 14400.0
 
     # legacy introspection helpers; composite mechanisms ("BASE") have no
     # "&" and report themselves on both axes.
@@ -80,26 +88,45 @@ class JobRecord:
 
 
 class Simulator:
-    """One simulation run over a fixed job list."""
+    """One simulation run over a job trace.
 
-    def __init__(self, cfg: SimConfig, jobs: List[JobSpec]):
+    ``jobs`` is either a materialized list (the legacy path: every
+    event is pushed up front, bit-for-bit the golden-tested behavior)
+    or any other iterable/iterator, which is consumed *lazily*: jobs
+    are ingested as the clock approaches their submit time
+    (``SimConfig.arrival_lookahead``), so a year-scale trace never
+    holds more than the active window of JobSpecs.
+
+    ``record_sink`` (optional) makes completed-job state *retire*: the
+    sink callable receives each finished :class:`JobRecord` exactly
+    once, after which the simulator drops every per-job structure for
+    that jid — ``records``/``jobs`` then hold O(active jobs), not
+    O(total), and metrics must be aggregated incrementally by the sink
+    (see :class:`repro.core.metrics.StreamingMetrics`).  Without a
+    sink, ``records`` accumulates every job as before and
+    :func:`repro.core.metrics.collect` works unchanged.
+    """
+
+    def __init__(self, cfg: SimConfig, jobs: Iterable[JobSpec],
+                 record_sink: Optional[Callable[[JobRecord], None]] = None):
         self.policies: PolicyBundle = resolve_mechanism(cfg.mechanism,
                                                         cfg.queue_policy)
         self.cfg = cfg
-        self.jobs: Dict[int, JobSpec] = {j.jid: j for j in jobs}
+        self.record_sink = record_sink
+        self.jobs: Dict[int, JobSpec] = {}
         self.ledger = NodeLedger(cfg.n_nodes)
         self.now = 0.0
         self._heap: List[Tuple[float, int, str, tuple]] = []
         self._seq = itertools.count()
         self.queue = WaitQueue()             # waiting jids, order-key sorted
         self.running: Dict[int, RunState] = {}
-        self.records: Dict[int, JobRecord] = {j.jid: JobRecord(j) for j in jobs}
+        self.records: Dict[int, JobRecord] = {}
         self.od_status: Dict[int, str] = {}  # noticed|arrived|timeout|done
         self.collecting = OrderedSet()       # od jids collecting releases (notice order)
         self.od_front: Dict[int, bool] = {}  # arrived ods waiting at queue front
         self.leases: Dict[int, List[Lease]] = {}
         self.progress: Dict[int, dict] = {}  # preempted-job carry-over state
-        self.est_remaining: Dict[int, float] = {j.jid: j.t_estimate for j in jobs}
+        self.est_remaining: Dict[int, float] = {}
         self._epochs: Dict[int, int] = {}    # monotonic per-jid END epoch
         self._estend_cache: Dict[int, Tuple[float, int]] = {}  # jid -> (est-end base, cur_size)
         self.ops = SchedulerOps(self)        # the handle policies act through
@@ -114,18 +141,78 @@ class Simulator:
         self.decision_times: List[float] = []
         self._in_schedule = False
         self._sched_pending = False
+        self.n_ingested = 0                  # jobs pulled from the trace
+        self.n_retired = 0                   # records handed to the sink
+        self._last_completion = 0.0
 
-        for j in jobs:
-            self._push(j.submit_time, "submit", (j.jid,))
-            if (j.jtype is JobType.ONDEMAND and j.notice_kind is not NoticeKind.NONE
-                    and self.policies.od_aware):
-                self._push(j.notice_time, "notice", (j.jid,))
-                self._push(j.est_arrival + cfg.release_threshold,
-                           "od_timeout", (j.jid,))
+        if isinstance(jobs, list):           # legacy: all events up front
+            self._arrivals = None
+            self._next_arrival: Optional[JobSpec] = None
+            for j in jobs:
+                self._ingest(j)
+        else:                                # streaming: ingest lazily
+            self._arrivals = iter(jobs)
+            self._next_arrival = next(self._arrivals, None)
 
     # ------------------------------------------------------------------ events
+    # Heap ties break on a sequence number.  Trace events (submit/notice/
+    # od_timeout) take (jid, slot)-derived seqs BELOW this base and
+    # dynamically scheduled events (end, planned_preempt) counter-derived
+    # seqs above it — the exact order the legacy constructor produced by
+    # pushing every trace event up front — so lazy ingestion cannot
+    # reorder simultaneous events (integer-second SWF traces collide
+    # constantly) and streaming stays tie-for-tie identical to the list
+    # path.
+    _DYN_SEQ_BASE = 1 << 60
+
     def _push(self, t: float, kind: str, data: tuple) -> None:
-        heapq.heappush(self._heap, (t, next(self._seq), kind, data))
+        heapq.heappush(self._heap,
+                       (t, self._DYN_SEQ_BASE + next(self._seq), kind, data))
+
+    def _push_trace(self, t: float, jid: int, slot: int, kind: str,
+                    data: tuple) -> None:
+        heapq.heappush(self._heap, (t, 4 * jid + slot, kind, data))
+
+    def _ingest(self, j: JobSpec) -> None:
+        """Admit one job to the simulation: per-job state + its events."""
+        if self._arrivals is not None and j.submit_time < self.now - 1e-9:
+            raise ValueError(
+                f"streaming arrival out of order: job {j.jid} submits at "
+                f"{j.submit_time} but the clock is already at {self.now} "
+                "(the arrival iterator must be submit-time sorted)")
+        self.jobs[j.jid] = j
+        self.records[j.jid] = JobRecord(j)
+        self.est_remaining[j.jid] = j.t_estimate
+        self.n_ingested += 1
+        self._push_trace(j.submit_time, j.jid, 0, "submit", (j.jid,))
+        if (j.jtype is JobType.ONDEMAND and j.notice_kind is not NoticeKind.NONE
+                and self.policies.od_aware):
+            if self._arrivals is not None \
+                    and j.notice_time < self.now - 1e-9:
+                raise ValueError(
+                    f"job {j.jid}'s advance notice at {j.notice_time} is "
+                    f"already behind the clock ({self.now}): "
+                    "SimConfig.arrival_lookahead "
+                    f"({self.cfg.arrival_lookahead}s) must exceed the "
+                    "workload's largest notice lead + late window")
+            self._push_trace(j.notice_time, j.jid, 1, "notice", (j.jid,))
+            self._push_trace(j.est_arrival + self.cfg.release_threshold,
+                             j.jid, 2, "od_timeout", (j.jid,))
+
+    def _feed(self) -> None:
+        """Pull pending arrivals whose submit time falls within
+        ``arrival_lookahead`` of the next event, so notice/timeout
+        events that *precede* an arrival are heaped before the clock
+        can pass them.  No-op on the legacy list path."""
+        nxt = self._next_arrival
+        if nxt is None:
+            return
+        horizon = (self._heap[0][0] if self._heap else nxt.submit_time) \
+            + self.cfg.arrival_lookahead
+        while nxt is not None and nxt.submit_time <= horizon:
+            self._ingest(nxt)
+            nxt = next(self._arrivals, None)
+        self._next_arrival = nxt
 
     def _advance(self, t: float) -> None:
         assert t >= self.now - 1e-9
@@ -140,9 +227,16 @@ class Simulator:
         ``_sched_pending`` and the loop epilogue runs one scheduling pass
         per event (handlers invoked it as their final statement, so the
         hoisted call is behaviorally identical).
+
+        On the streaming path, each iteration first tops the heap up
+        with every arrival inside the lookahead window of the next
+        event; a newly ingested event earlier than the current top is
+        simply popped first.
         """
         heap = self._heap
-        while heap:
+        while heap or self._next_arrival is not None:
+            if self._next_arrival is not None:
+                self._feed()
             t, _, kind, data = heapq.heappop(heap)
             self._advance(t)
             getattr(self, f"_on_{kind}")(*data)
@@ -150,6 +244,12 @@ class Simulator:
                 self._sched_pending = False
                 self._schedule()
             self.ledger.check()
+        if self.record_sink is not None and self.records:
+            # jobs that never reached an END (e.g. unstartable size):
+            # the sink must still see every record or its n_jobs and
+            # ratio denominators would diverge from collect()'s
+            for jid in list(self.records):
+                self._retire(jid, self.records[jid])
         return self.records
 
     # ------------------------------------------------------------- submission
@@ -404,7 +504,28 @@ class Simulator:
             freed = self._repay_leases(jid, freed)
         if freed > 0:
             self._route_release(freed)
+        self._last_completion = max(self._last_completion, self.now)
+        if self.record_sink is not None:
+            self._retire(jid, rec)
         self._sched_pending = True
+
+    def _retire(self, jid: int, rec: JobRecord) -> None:
+        """Hand a finished record to the sink and drop every per-job
+        structure: with a sink installed the simulator holds O(active)
+        job state, not O(total).  Only reached from ``_on_end`` —
+        completed jobs are never rescheduled, stale heap events for the
+        jid are epoch/status-guarded, and a done/timed-out on-demand
+        status reads the same as an absent one everywhere it is
+        checked."""
+        self.record_sink(rec)
+        self.n_retired += 1
+        del self.records[jid]
+        del self.jobs[jid]
+        del self.est_remaining[jid]
+        self._epochs.pop(jid, None)
+        self.progress.pop(jid, None)
+        if rec.job.jtype is JobType.ONDEMAND:
+            self.od_status.pop(jid, None)
 
     def _repay_leases(self, od: int, avail: int) -> int:
         """Return leased nodes to lenders (paper §III-B3)."""
@@ -607,4 +728,6 @@ class Simulator:
 
     # ---------------------------------------------------------------- results
     def finish_time(self) -> float:
+        if not self.records:  # every record retired through the sink
+            return self._last_completion
         return max((r.completion or 0.0) for r in self.records.values())

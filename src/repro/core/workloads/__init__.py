@@ -10,27 +10,28 @@
 See docs/workloads.md for the source/transform contract and a 10-line
 custom-source example.
 """
-from .base import (Scenario, ScenarioTransform, UnknownWorkloadError,
-                   WorkloadDataError, WorkloadSource, canonicalize,
-                   get_source, get_transform, register_source,
+from .base import (Scenario, ScenarioTransform, TraceStats,
+                   UnknownWorkloadError, WorkloadDataError, WorkloadSource,
+                   canonicalize, get_source, get_transform, register_source,
                    register_transform, registered_sources,
-                   registered_transforms)
+                   registered_transforms, trace_sha256, trace_stats_of)
 from .synthetic import (NOTICE_KINDS, NOTICE_MIXES, SIZE_BUCKETS,
                         SIZE_WEIGHTS, ArrivalModel, NoticeModel,
                         ProjectModel, RuntimeModel, SizeModel,
                         ThetaGenerator, WorkloadConfig,
                         assign_project_types, daly_interval, generate,
                         notice_mix, rigid_ckpt_params)
-from .swf import SWF_FIELDS, SwfTrace, parse_swf
+from .swf import SWF_FIELDS, SwfTrace, iter_swf, parse_swf
 from .transforms import (BurstInject, DiurnalModulation, LoadScale,
                          NoticeMixOverride, TypeMixReassign)
 from .presets import get_scenario, register_scenario, registered_scenarios
 
 __all__ = [
-    "Scenario", "ScenarioTransform", "WorkloadSource", "UnknownWorkloadError",
-    "WorkloadDataError",
+    "Scenario", "ScenarioTransform", "TraceStats", "WorkloadSource",
+    "UnknownWorkloadError", "WorkloadDataError",
     "canonicalize", "get_source", "get_transform", "register_source",
     "register_transform", "registered_sources", "registered_transforms",
+    "trace_sha256", "trace_stats_of", "iter_swf",
     "NOTICE_KINDS", "NOTICE_MIXES", "SIZE_BUCKETS", "SIZE_WEIGHTS",
     "ArrivalModel", "NoticeModel", "ProjectModel", "RuntimeModel",
     "SizeModel", "ThetaGenerator", "WorkloadConfig",

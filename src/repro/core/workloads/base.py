@@ -41,9 +41,11 @@ accepts the preset name string directly.
 """
 from __future__ import annotations
 
+import hashlib
 import os
 from dataclasses import dataclass, field, replace
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, Iterable, Iterator, List, Optional, \
+    Sequence, Tuple
 
 import numpy as np
 
@@ -67,6 +69,21 @@ class WorkloadDataError(ValueError):
 
 
 # ------------------------------------------------------------------ protocols
+@dataclass(frozen=True)
+class TraceStats:
+    """Cheap global aggregates of a canonical trace, computable without
+    materializing it: job/on-demand counts and the submit-time span.
+    Streaming transforms pre-draw their RNG from these (a transform's
+    randomness may depend on trace *shape*, never on trace *contents*),
+    and each transform republishes the stats it hands downstream via
+    :meth:`ScenarioTransform.stream_stats`."""
+
+    n_jobs: int
+    n_od: int
+    t0: float
+    t1: float
+
+
 class WorkloadSource:
     """Produces one job trace.
 
@@ -75,6 +92,16 @@ class WorkloadSource:
         MUST accept a ``seed`` keyword (Experiment re-seeds each run);
       * ``jobs()`` returns a canonical trace — submit-time sorted with
         contiguous jids starting at 0 (use :func:`canonicalize`);
+      * ``iter_jobs()`` yields the *same* canonical trace lazily — the
+        streaming entry point (year-scale replays).  The default
+        materializes through ``jobs()``; sources that can stream
+        (builtin "theta" and "swf" stage compact numeric columns
+        instead of JobSpec objects) override it, and must be
+        job-for-job identical to ``jobs()``;
+      * ``trace_stats()`` returns the :class:`TraceStats` of the
+        canonical trace without yielding it (streaming transforms
+        pre-draw from these).  The default materializes; streaming
+        sources override it to stay bounded;
       * ``n_nodes`` is the system size the trace targets (SimConfig uses
         it when a Scenario does not override it).
     """
@@ -85,8 +112,25 @@ class WorkloadSource:
     def jobs(self) -> List[JobSpec]:
         raise NotImplementedError
 
+    def iter_jobs(self) -> Iterator[JobSpec]:
+        return iter(self.jobs())
+
+    def trace_stats(self) -> TraceStats:
+        return trace_stats_of(self.jobs())
+
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return f"<{type(self).__name__} source:{self.name}>"
+
+
+def trace_stats_of(jobs: Sequence[JobSpec]) -> TraceStats:
+    """TraceStats of a materialized (not necessarily sorted) trace."""
+    from ..job import JobType
+    if not jobs:
+        return TraceStats(0, 0, 0.0, 0.0)
+    subs = [j.submit_time for j in jobs]
+    return TraceStats(len(jobs),
+                      sum(j.jtype is JobType.ONDEMAND for j in jobs),
+                      min(subs), max(subs))
 
 
 class ScenarioTransform:
@@ -98,13 +142,40 @@ class ScenarioTransform:
     on-demand cap — and returns the transformed trace; it may mutate and
     return the input list.  Scenario.realize re-canonicalizes after the
     whole stack, so transforms may leave arrivals unsorted or jids stale
-    (new jobs use ``jid=-1``)."""
+    (new jobs use ``jid=-1``).
+
+    Transforms that can rewrite a trace *one job at a time* additionally
+    set ``streamable = True`` and implement ``stream``, which lets
+    :meth:`Scenario.iter_realize` run the whole stack in bounded memory.
+    The streaming contract (bit-identity with ``apply``):
+
+      * ``stream(jobs, rng, n_nodes, stats)`` is called **eagerly** in
+        stack order and must consume ALL the RNG draws ``apply`` would
+        make *before returning* its generator (pre-draw from ``stats``
+        — a draw may depend on trace shape, never on job contents), so
+        the shared per-run stream is consumed in exactly the
+        materialized order;
+      * the returned iterator must preserve submit-time order (monotone
+        arrival maps) — order-restructuring rewrites (burst injection,
+        type reassignment) stay ``streamable = False`` and force
+        ``iter_realize`` to fall back to the materialized path;
+      * ``stream_stats`` republishes the stats the transform hands the
+        next stage (e.g. a compressed arrival span)."""
 
     name: str = "?"
+    streamable: bool = False
 
     def apply(self, jobs: List[JobSpec], rng: np.random.Generator,
               n_nodes: int) -> List[JobSpec]:
         raise NotImplementedError
+
+    def stream(self, jobs: Iterator[JobSpec], rng: np.random.Generator,
+               n_nodes: int, stats: TraceStats) -> Iterator[JobSpec]:
+        raise NotImplementedError(
+            f"transform {self.name!r} is not streamable")
+
+    def stream_stats(self, stats: TraceStats) -> TraceStats:
+        return stats
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return f"<{type(self).__name__} transform:{self.name}>"
@@ -248,6 +319,74 @@ class Scenario:
         for tname, tparams in self.transforms:
             jobs = get_transform(tname, **tparams).apply(jobs, rng, n_nodes)
         return canonicalize(jobs), n_nodes
+
+    @property
+    def streamable(self) -> bool:
+        """True when the whole transform stack can run lazily (every
+        transform is streamable); the source itself always can, via the
+        materializing ``iter_jobs`` default at worst."""
+        _ensure_builtins()
+        return all(getattr(_TRANSFORMS.get(t, ScenarioTransform),
+                           "streamable", False)
+                   for t, _ in self.transforms)
+
+    def iter_realize(self, seed: Optional[int] = None
+                     ) -> Tuple[Iterator[JobSpec], int]:
+        """Streaming :meth:`realize`: returns ``(job_iterator, n_nodes)``.
+
+        Job-for-job identical to ``realize`` (same draws from the same
+        per-run stream, same canonical order) but lazy: the source
+        yields jobs one at a time and streamable transforms rewrite
+        them in flight.  A stack containing a non-streamable transform
+        (``burst_inject``, ``type_mix`` — they restructure the trace)
+        falls back to materializing internally; the call still returns
+        an iterator, just not a bounded-memory one.
+        """
+        if seed is None:
+            seed = self.seed
+        if not self.streamable:
+            jobs, n_nodes = self.realize(seed)
+            return iter(jobs), n_nodes
+        params = {k: v for k, v in self.params.items() if k != "seed"}
+        if self.n_nodes is not None:
+            params["n_nodes"] = self.n_nodes
+        src = get_source(self.source, seed=seed, **params)
+        n_nodes = src.n_nodes
+        rng = np.random.default_rng([seed, 0x5CEA])
+        stream = src.iter_jobs()
+        if self.transforms:
+            stats = src.trace_stats()
+            for tname, tparams in self.transforms:
+                tf = get_transform(tname, **tparams)
+                # stream() consumes tf's whole RNG share eagerly, so the
+                # shared stream is drawn in materialized stack order
+                stream = tf.stream(stream, rng, n_nodes, stats)
+                stats = tf.stream_stats(stats)
+        return _renumber(stream), n_nodes
+
+
+def _renumber(stream: Iterator[JobSpec]) -> Iterator[JobSpec]:
+    """The streaming half of :func:`canonicalize`: sources yield in
+    submit order and streamable transforms preserve it, so only the
+    contiguous-jid invariant needs re-asserting."""
+    for new_id, job in enumerate(stream):
+        job.jid = new_id
+        yield job
+
+
+def trace_sha256(jobs: Iterable[JobSpec]) -> str:
+    """Order-sensitive sha256 over every field of every job — the
+    job-for-job identity fingerprint the streaming tests and benchmarks
+    compare between ``iter_realize`` and ``realize``.  Consumes the
+    iterable incrementally (safe on year-scale streams)."""
+    h = hashlib.sha256()
+    for j in jobs:
+        h.update(repr((j.jid, j.jtype.value, j.project, j.submit_time,
+                       j.size, j.t_estimate, j.t_actual, j.t_setup,
+                       j.n_min, j.notice_kind.value, j.notice_time,
+                       j.est_arrival, j.ckpt_overhead,
+                       j.ckpt_interval)).encode())
+    return h.hexdigest()
 
 
 def _ensure_builtins() -> None:

@@ -177,6 +177,24 @@ class RuntimeModel:
         return min(t_est, cfg.runtime_max_s * 3)
 
 
+class _SubmitView:
+    """Adapter exposing ``jobs[i].submit_time`` through the indexable
+    get/set interface :meth:`ArrivalModel.burstify_times` rewrites, so
+    the one burst algorithm serves both the materialized JobSpec list
+    and the streaming path's numpy submit column."""
+
+    __slots__ = ("jobs",)
+
+    def __init__(self, jobs: List[JobSpec]):
+        self.jobs = jobs
+
+    def __getitem__(self, i: int) -> float:
+        return self.jobs[i].submit_time
+
+    def __setitem__(self, i: int, t: float) -> None:
+        self.jobs[i].submit_time = t
+
+
 class ArrivalModel:
     """Load-scaled uniform arrivals + bursty on-demand windows (Fig. 5)."""
 
@@ -192,13 +210,20 @@ class ArrivalModel:
                  jobs: List[JobSpec],
                  od_members: Dict[int, List[int]]) -> None:
         """Cluster each project's on-demand jobs into short windows."""
+        self.burstify_times(rng, cfg, _SubmitView(jobs), od_members)
+
+    def burstify_times(self, rng: np.random.Generator, cfg: WorkloadConfig,
+                       times, od_members: Dict[int, List[int]]) -> None:
+        """The burst algorithm over an indexable submit-time container
+        (``times[i]`` get/set) — the single copy both the materialized
+        and the streaming (columnar) generator paths draw through."""
         for _p, idxs in od_members.items():
             k = 0
             while k < len(idxs):
                 burst = int(rng.integers(*cfg.od_burst_size))
-                anchor = jobs[idxs[k]].submit_time
+                anchor = times[idxs[k]]
                 for j in idxs[k:k + burst]:
-                    jobs[j].submit_time = float(
+                    times[j] = float(
                         anchor + rng.uniform(0.0, cfg.od_burst_window))
                 k += burst
 
@@ -207,32 +232,66 @@ class NoticeModel:
     """Table III notice kinds and lead/early/late time geometry.
 
     Source-agnostic: the SWF annotator and the notice-mix scenario
-    transform reuse it on any list of on-demand jobs."""
+    transform reuse it on any list of on-demand jobs.  The draws are
+    split from the arithmetic (``draw`` / ``apply_one``) because the
+    draw *count* depends only on the kind, never on the job — which is
+    what lets the streaming paths pre-draw the whole notice share of an
+    RNG stream and attach it to jobs as they flow past later.
+    ``assign`` is defined in terms of both, so subclasses override
+    ``draw``/``apply_one`` (not ``assign``) to stay stream-consistent.
+    """
+
+    def draw(self, rng: np.random.Generator, n_od: int,
+             mix: Sequence[float], lead: tuple = (900.0, 1800.0),
+             late_window: float = 1800.0) -> List[tuple]:
+        """All RNG for ``n_od`` on-demand jobs, in assign order:
+        one ``(kind, lead_s, extra)`` tuple per job."""
+        kinds = rng.choice(4, size=n_od, p=list(mix))
+        out = []
+        for kidx in kinds:
+            kind = NOTICE_KINDS[int(kidx)]
+            if kind is NoticeKind.NONE:
+                out.append((kind, 0.0, 0.0))
+                continue
+            lead_s = float(rng.uniform(*lead))
+            if kind is NoticeKind.ACCURATE:
+                extra = 0.0
+            elif kind is NoticeKind.EARLY:
+                extra = float(rng.uniform(0.0, lead_s))
+            else:  # LATE
+                extra = float(rng.uniform(0.0, late_window))
+            out.append((kind, lead_s, extra))
+        return out
+
+    @staticmethod
+    def apply_one(j: JobSpec, drawn: tuple) -> None:
+        """Set one job's notice fields from its pre-drawn tuple (pure
+        arithmetic on the job's current submit time — no RNG)."""
+        kind, lead_s, extra = drawn
+        j.notice_kind = kind
+        if kind is NoticeKind.NONE:
+            j.notice_time = None
+            j.est_arrival = None
+            return
+        arrival = j.submit_time
+        if kind is NoticeKind.ACCURATE:
+            j.notice_time = arrival - lead_s
+            j.est_arrival = arrival
+        elif kind is NoticeKind.EARLY:
+            # actual arrival uniform in (notice, est_arrival)
+            j.notice_time = arrival - extra
+            j.est_arrival = j.notice_time + lead_s
+        else:  # LATE: arrival within `late_window` after estimate
+            j.est_arrival = arrival - extra
+            j.notice_time = j.est_arrival - lead_s
+        j.notice_time = max(j.notice_time, 0.0)
 
     def assign(self, rng: np.random.Generator, od_jobs: List[JobSpec],
                mix: Sequence[float], lead: tuple = (900.0, 1800.0),
                late_window: float = 1800.0) -> None:
-        kinds = rng.choice(4, size=len(od_jobs), p=list(mix))
-        for j, kidx in zip(od_jobs, kinds):
-            kind = NOTICE_KINDS[int(kidx)]
-            j.notice_kind = kind
-            if kind is NoticeKind.NONE:
-                j.notice_time = None
-                j.est_arrival = None
-                continue
-            lead_s = float(rng.uniform(*lead))
-            arrival = j.submit_time
-            if kind is NoticeKind.ACCURATE:
-                j.notice_time = arrival - lead_s
-                j.est_arrival = arrival
-            elif kind is NoticeKind.EARLY:
-                # actual arrival uniform in (notice, est_arrival)
-                j.notice_time = arrival - float(rng.uniform(0.0, lead_s))
-                j.est_arrival = j.notice_time + lead_s
-            else:  # LATE: arrival within `late_window` after estimate
-                j.est_arrival = arrival - float(rng.uniform(0.0, late_window))
-                j.notice_time = j.est_arrival - lead_s
-            j.notice_time = max(j.notice_time, 0.0)
+        for j, drawn in zip(od_jobs, self.draw(rng, len(od_jobs), mix,
+                                               lead, late_window)):
+            self.apply_one(j, drawn)
 
 
 # ----------------------------------------------------------------- generator
@@ -319,6 +378,105 @@ class ThetaGenerator(WorkloadSource):
                                  late_window=cfg.late_window)
 
         return canonicalize(jobs)
+
+    # ------------------------------------------------------------- streaming
+    # _columns() MUST stay draw-for-draw in sync with jobs() above — it is
+    # the same algorithm with numeric columns in place of JobSpec objects
+    # (tests/test_streaming.py pins the two paths sha256-identical).
+    def _columns(self) -> dict:
+        """Sample the whole trace into compact per-job columns (~100 B/job
+        instead of a JobSpec object), deferring JobSpec construction to
+        :meth:`iter_jobs` — the bounded-memory half of the generator.
+        Memoized: trace_stats() and iter_jobs() share one sampling."""
+        cached = getattr(self, "_columns_cache", None)
+        if cached is not None:
+            return cached
+        cfg = self.cfg
+        mix = notice_mix(cfg.notice_mix)  # fail fast, before any sampling
+        rng = np.random.default_rng(cfg.seed)
+
+        proj_w = self.project_model.weights(cfg)
+        proj_type = self.project_model.types(rng, cfg)
+        projects = rng.choice(cfg.n_projects, size=cfg.n_jobs, p=proj_w)
+        sizes = self.size_model.sample(rng, cfg, cfg.n_jobs)
+        runtimes = self.runtime_model.sample(rng, cfg, cfg.n_jobs)
+        arrivals = self.arrival_model.sample(rng, cfg, sizes, runtimes)
+
+        n = cfg.n_jobs
+        jtype = np.empty(n, dtype=object)       # JobType per job
+        submit = np.empty(n, dtype=np.float64)
+        t_est = np.empty(n, dtype=np.float64)
+        setup = np.empty(n, dtype=np.float64)
+        od_members: Dict[int, List[int]] = {}
+        od_order: List[int] = []
+        for i in range(n):
+            p = int(projects[i])
+            jt: JobType = proj_type[p]
+            size, t_act = int(sizes[i]), float(runtimes[i])
+            if jt is JobType.ONDEMAND and size > cfg.n_nodes // 2:
+                jt = JobType.RIGID if rng.random() < 0.5 else JobType.MALLEABLE
+            t_est[i] = self.runtime_model.estimate(rng, cfg, t_act)
+            if jt is JobType.RIGID:
+                setup[i] = float(t_act * rng.uniform(*cfg.rigid_setup_frac))
+            elif jt is JobType.MALLEABLE:
+                setup[i] = float(t_act * rng.uniform(*cfg.malleable_setup_frac))
+            else:
+                setup[i] = float(t_act * rng.uniform(*cfg.rigid_setup_frac))
+                od_members.setdefault(p, []).append(i)
+                od_order.append(i)
+            jtype[i] = jt
+            submit[i] = float(arrivals[i])
+
+        self.arrival_model.burstify_times(rng, cfg, submit, od_members)
+        # od_order is jid order == the order jobs() collects od_jobs in
+        notice = dict(zip(od_order,
+                          self.notice_model.draw(rng, len(od_order), mix,
+                                                 lead=cfg.notice_lead,
+                                                 late_window=cfg.late_window)))
+        order = np.argsort(submit, kind="stable")  # == canonicalize's sort
+        self._columns_cache = {
+            "jtype": jtype, "submit": submit, "t_est": t_est,
+            "setup": setup, "sizes": sizes, "runtimes": runtimes,
+            "projects": projects, "notice": notice, "order": order}
+        return self._columns_cache
+
+    def iter_jobs(self):
+        """Yield the canonical trace lazily — job-for-job identical to
+        ``jobs()`` (same RNG stream, same stable submit sort), but only
+        one JobSpec is alive per step beyond the numeric columns."""
+        cfg = self.cfg
+        c = self._columns()
+        jtype, submit, t_est, setup = (c["jtype"], c["submit"], c["t_est"],
+                                       c["setup"])
+        for new_id, i in enumerate(c["order"]):
+            i = int(i)
+            jt: JobType = jtype[i]
+            size = int(c["sizes"][i])
+            kw = {}
+            if jt is JobType.RIGID:
+                kw["ckpt_overhead"], kw["ckpt_interval"] = rigid_ckpt_params(
+                    size, cfg.ckpt_overhead_small, cfg.ckpt_overhead_large,
+                    cfg.node_mtbf_hours, cfg.ckpt_freq_factor)
+            elif jt is JobType.MALLEABLE:
+                kw["n_min"] = max(1, math.ceil(cfg.malleable_min_frac * size))
+            j = JobSpec(new_id, jt, f"proj{int(c['projects'][i])}",
+                        float(submit[i]), size, float(t_est[i]),
+                        float(c["runtimes"][i]), t_setup=float(setup[i]),
+                        **kw)
+            if jt is JobType.ONDEMAND:
+                self.notice_model.apply_one(j, c["notice"][i])
+            yield j
+
+    def trace_stats(self):
+        from .base import TraceStats
+        c = self._columns()
+        if not len(c["order"]):
+            return TraceStats(0, 0, 0.0, 0.0)
+        return TraceStats(
+            len(c["order"]),
+            sum(jt is JobType.ONDEMAND for jt in c["jtype"]),
+            float(c["submit"][c["order"][0]]),
+            float(c["submit"][c["order"][-1]]))
 
 
 def generate(cfg: WorkloadConfig) -> List[JobSpec]:

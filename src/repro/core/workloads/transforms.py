@@ -17,12 +17,13 @@ re-canonicalizes (sort + renumber) after the whole stack.
 from __future__ import annotations
 
 import math
-from typing import List, Optional
+from dataclasses import replace
+from typing import Iterator, List, Optional
 
 import numpy as np
 
 from ..job import JobSpec, JobType, NoticeKind
-from .base import ScenarioTransform, register_transform
+from .base import ScenarioTransform, TraceStats, register_transform
 from .synthetic import NoticeModel, assign_project_types, notice_mix, \
     rigid_ckpt_params
 
@@ -42,13 +43,21 @@ class LoadScale(ScenarioTransform):
 
     factor > 1 packs the same work into a shorter span (heavier load);
     factor < 1 stretches it.  Runtimes and sizes are untouched; notice
-    windows translate with their jobs.
+    windows translate with their jobs.  Streamable: the arrival map is
+    monotone and draws no RNG, so jobs rewrite one at a time.
     """
+
+    streamable = True
 
     def __init__(self, factor: float = 1.0):
         if factor <= 0:
             raise ValueError(f"load_scale factor must be > 0, got {factor}")
         self.factor = factor
+
+    def _move(self, j: JobSpec, t0: float) -> None:
+        new_t = t0 + (j.submit_time - t0) / self.factor
+        _shift_notice(j, new_t - j.submit_time)
+        j.submit_time = new_t
 
     def apply(self, jobs: List[JobSpec], rng: np.random.Generator,
               n_nodes: int) -> List[JobSpec]:
@@ -56,10 +65,26 @@ class LoadScale(ScenarioTransform):
             return jobs
         t0 = min(j.submit_time for j in jobs)
         for j in jobs:
-            new_t = t0 + (j.submit_time - t0) / self.factor
-            _shift_notice(j, new_t - j.submit_time)
-            j.submit_time = new_t
+            self._move(j, t0)
         return jobs
+
+    def stream(self, jobs: Iterator[JobSpec], rng: np.random.Generator,
+               n_nodes: int, stats: TraceStats) -> Iterator[JobSpec]:
+        if stats.n_jobs == 0 or self.factor == 1.0:
+            return jobs
+
+        def gen():
+            for j in jobs:
+                self._move(j, stats.t0)
+                yield j
+        return gen()
+
+    def stream_stats(self, stats: TraceStats) -> TraceStats:
+        if stats.n_jobs == 0 or self.factor == 1.0:
+            return stats
+        # same float expression _move applies to the last arrival
+        return replace(stats,
+                       t1=stats.t0 + (stats.t1 - stats.t0) / self.factor)
 
 
 @register_transform("burst_inject")
@@ -131,8 +156,11 @@ class DiurnalModulation(ScenarioTransform):
     arrival density concentrates around ``peak`` each ``period`` while
     the span endpoints and the job count are preserved.  ``amplitude``
     must stay below 1 (intensity must remain positive for the warp to be
-    monotone).
+    monotone).  Streamable: the warp is a monotone per-job map built
+    from the span endpoints alone, with no RNG.
     """
+
+    streamable = True
 
     def __init__(self, amplitude: float = 0.6, period: float = 86400.0,
                  peak: float = 14 * 3600.0, grid: int = 4096):
@@ -150,6 +178,14 @@ class DiurnalModulation(ScenarioTransform):
                 + self.amplitude / w * (np.sin(w * (t - self.peak))
                                         - math.sin(w * (t0 - self.peak))))
 
+    def _warp(self, j: JobSpec, t0: float, t1: float, grid: np.ndarray,
+              cum: np.ndarray, total: float) -> None:
+        # uniform position along the span -> inverse-CDF of lambda
+        target = (j.submit_time - t0) / (t1 - t0) * total
+        new_t = float(np.interp(target, cum, grid))
+        _shift_notice(j, new_t - j.submit_time)
+        j.submit_time = new_t
+
     def apply(self, jobs: List[JobSpec], rng: np.random.Generator,
               n_nodes: int) -> List[JobSpec]:
         if len(jobs) < 2 or self.amplitude == 0.0:
@@ -162,12 +198,24 @@ class DiurnalModulation(ScenarioTransform):
         cum = self._cumulative(grid, t0)  # monotone since amplitude < 1
         total = cum[-1]
         for j in jobs:
-            # uniform position along the span -> inverse-CDF of lambda
-            target = (j.submit_time - t0) / (t1 - t0) * total
-            new_t = float(np.interp(target, cum, grid))
-            _shift_notice(j, new_t - j.submit_time)
-            j.submit_time = new_t
+            self._warp(j, t0, t1, grid, cum, total)
         return jobs
+
+    def stream(self, jobs: Iterator[JobSpec], rng: np.random.Generator,
+               n_nodes: int, stats: TraceStats) -> Iterator[JobSpec]:
+        t0, t1 = stats.t0, stats.t1
+        if stats.n_jobs < 2 or self.amplitude == 0.0 or t1 <= t0:
+            return jobs
+        grid = np.linspace(t0, t1, self.grid)
+        cum = self._cumulative(grid, t0)
+        total = cum[-1]
+
+        def gen():
+            for j in jobs:
+                self._warp(j, t0, t1, grid, cum, total)
+                yield j
+        return gen()
+        # span endpoints are fixed points of the warp: stats unchanged
 
 
 @register_transform("notice_mix")
@@ -176,7 +224,14 @@ class NoticeMixOverride(ScenarioTransform):
 
     Turns any source/scenario into its W1-W5 variants without touching
     arrival or size structure — the knob behind the paper-mix presets.
+    Streamable: the draw count per on-demand job depends only on its
+    drawn kind, so the whole notice share of the RNG stream is
+    pre-drawn from ``stats.n_od`` (:meth:`NoticeModel.draw`) and
+    attached to on-demand jobs as they flow past, in stream order —
+    exactly the order ``apply`` walks the materialized list.
     """
+
+    streamable = True
 
     def __init__(self, mix: str = "W5", notice_lead: tuple = (900.0, 1800.0),
                  late_window: float = 1800.0):
@@ -191,6 +246,21 @@ class NoticeMixOverride(ScenarioTransform):
                              lead=self.notice_lead,
                              late_window=self.late_window)
         return jobs
+
+    def stream(self, jobs: Iterator[JobSpec], rng: np.random.Generator,
+               n_nodes: int, stats: TraceStats) -> Iterator[JobSpec]:
+        # all RNG consumed here, before the first job flows (stack order)
+        drawn = NoticeModel().draw(rng, stats.n_od, notice_mix(self.mix),
+                                   lead=self.notice_lead,
+                                   late_window=self.late_window)
+
+        def gen():
+            it = iter(drawn)
+            for j in jobs:
+                if j.jtype is JobType.ONDEMAND:
+                    NoticeModel.apply_one(j, next(it))
+                yield j
+        return gen()
 
 
 @register_transform("type_mix")

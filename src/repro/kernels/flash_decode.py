@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .ops import tpu_compiler_params, tpu_memory_space
+
 NEG_INF = -1e30
 
 
@@ -83,7 +85,7 @@ def flash_decode(q, k, v, kv_valid_len, *, scale=None, block_kv: int = 1024,
         functools.partial(_kernel, block_kv=block_kv, n_groups=G),
         grid=(B, K, nk),
         in_specs=[
-            pl.BlockSpec(memory_space=pltpu.MemorySpace.SMEM),
+            pl.BlockSpec(memory_space=tpu_memory_space("SMEM")),
             pl.BlockSpec((1, 1, G, D), lambda b, h, j: (b, h, 0, 0)),
             pl.BlockSpec((1, block_kv, 1, D), lambda b, h, j: (b, j, h, 0)),
             pl.BlockSpec((1, block_kv, 1, Dv), lambda b, h, j: (b, j, h, 0)),
@@ -95,7 +97,7 @@ def flash_decode(q, k, v, kv_valid_len, *, scale=None, block_kv: int = 1024,
             pltpu.VMEM((G,), jnp.float32),
             pltpu.VMEM((G,), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(vlen, qs, k, v)

@@ -23,6 +23,30 @@ import jax.numpy as jnp
 _BACKEND_OVERRIDE: Optional[str] = None  # "jnp" | "pallas" | None=auto
 
 
+def tpu_compiler_params(**kwargs):
+    """Version-compat constructor for the Pallas TPU compiler params.
+
+    JAX renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``
+    (and older releases only have the TPU-prefixed name), so resolve
+    whichever the installed JAX exposes — the kwargs are identical.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    return cls(**kwargs)
+
+
+def tpu_memory_space(name: str):
+    """Same rename compat for ``pltpu.MemorySpace`` (nee
+    ``TPUMemorySpace``): ``tpu_memory_space("SMEM")``."""
+    from jax.experimental.pallas import tpu as pltpu
+    enum = getattr(pltpu, "MemorySpace", None)
+    if enum is None:
+        enum = pltpu.TPUMemorySpace
+    return getattr(enum, name)
+
+
 def set_backend(name: Optional[str]) -> None:
     global _BACKEND_OVERRIDE
     _BACKEND_OVERRIDE = name

@@ -77,6 +77,16 @@ def collective_stats(hlo: str) -> dict:
     return out
 
 
+def cost_analysis_dict(compiled) -> dict:
+    """Version-compat wrapper for ``Compiled.cost_analysis()``: newer jax
+    returns a per-program list of dicts where older jax returned the dict
+    itself.  Returns the (first) program's flat {counter: value} dict."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
 def _arch_cfg(arch: str) -> ModelConfig:
     return get_config(arch)
 
@@ -176,7 +186,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     except Exception as e:  # pragma: no cover
         res["memory"] = {"error": repr(e)[:200]}
     try:
-        ca = compiled.cost_analysis()
+        ca = cost_analysis_dict(compiled)
         res["cost"] = {k: float(v) for k, v in ca.items()
                        if k in ("flops", "bytes accessed", "transcendentals",
                                 "bytes accessed output", "optimal_seconds")}

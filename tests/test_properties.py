@@ -176,3 +176,46 @@ def test_od_jobs_never_preempted(seed, mech):
     for r in sim.records.values():
         if r.job.jtype is JobType.ONDEMAND:
             assert r.n_preempted == 0 and r.n_shrunk == 0
+
+
+# --------------------------------------------------- chunked SWF parsing
+@given(chunk_lines=st.integers(1, 64),
+       max_jobs=st.one_of(st.none(), st.integers(1, 100)),
+       data=st.data())
+@settings(max_examples=40, deadline=None)
+def test_chunked_swf_parse_equals_whole_file(tmp_path_factory, chunk_lines,
+                                             max_jobs, data):
+    """iter_swf must yield the same records and header for ANY chunk
+    size — comments, blank lines, and short/long job lines landing on
+    chunk boundaries included."""
+    from repro.core.workloads.swf import SWF_FIELDS, iter_swf
+
+    lines = ["; MaxNodes: 512", "; Note: chunk boundary torture"]
+    n_lines = data.draw(st.integers(0, 40))
+    for i in range(n_lines):
+        kind = data.draw(st.sampled_from(("job", "comment", "blank",
+                                          "short", "padded")))
+        if kind == "comment":
+            lines.append(f"; c{i}: v{i}")
+        elif kind == "blank":
+            lines.append("")
+        elif kind == "short":   # fewer fields than SWF defines: -1 padded
+            lines.append(f"{i} {i * 10} 0 {60 + i} {1 + i % 8}")
+        elif kind == "padded":  # whitespace noise
+            lines.append(f"  {i}\t{i * 10} 0 {60 + i} {1 + i % 8} "
+                         + " ".join(["-1"] * 13) + "  ")
+        else:
+            lines.append(f"{i} {i * 10} 0 {60 + i} {1 + i % 8} "
+                         + " ".join(str(f) for f in range(13)))
+    path = tmp_path_factory.mktemp("swf") / "t.swf"
+    path.write_text("\n".join(lines) + "\n")
+
+    whole_header, chunk_header = {}, {}
+    whole = list(iter_swf(str(path), max_jobs, header=whole_header,
+                          chunk_lines=10_000))
+    chunked = list(iter_swf(str(path), max_jobs, header=chunk_header,
+                            chunk_lines=chunk_lines))
+    assert whole == chunked
+    assert whole_header == chunk_header
+    for rec in chunked:
+        assert set(rec) == set(SWF_FIELDS)

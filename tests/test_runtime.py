@@ -121,7 +121,7 @@ def test_mini_dryrun_with_moe_shard_map():
     run_py("""
 import jax
 from repro.configs.reduced import reduced
-from repro.launch.dryrun import build_lowerable
+from repro.launch.dryrun import build_lowerable, cost_analysis_dict
 from repro.launch.mesh import make_mesh
 from repro.models import SHAPES_BY_NAME, set_mesh
 from repro.models.config import ShapeSpec
@@ -134,7 +134,7 @@ fn, args, in_sh, out_sh, donate = build_lowerable(cfg, shape, mesh)
 with mesh:
     c = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
                 donate_argnums=donate).lower(*args).compile()
-print("compiled_ok", c.cost_analysis().get("flops", 0) > 0)
+print("compiled_ok", cost_analysis_dict(c).get("flops", 0) > 0)
 """)
 
 

@@ -1,0 +1,340 @@
+"""Streaming replay engine tests: lazy sources == materialized sources
+job-for-job (sha256), bounded simulator memory under a record sink, and
+streaming sweep/metrics equivalence.
+
+The bit-identity pins here are what let the engine swap freely between
+the two data-flow modes: every assertion compares the streaming path
+against the golden-tested materialized path, never against re-derived
+expectations.
+"""
+import json
+import math
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (Experiment, SimConfig, Simulator, WorkloadConfig,
+                        collect, generate)
+from repro.core.metrics import P2Quantile, StreamingMetrics, Welford
+from repro.core.workloads import (Scenario, SwfTrace, ThetaGenerator,
+                                  trace_sha256)
+
+SAMPLE_SWF = os.path.join(os.path.dirname(__file__), "data", "sample.swf")
+
+MECHS = ("BASE", "CUA&SPAA")
+SEEDS = (0, 1)
+
+
+def _close(a, b, tol=1e-9):
+    if isinstance(a, float) and isinstance(b, float):
+        if math.isnan(a) and math.isnan(b):
+            return True
+        return abs(a - b) <= tol * max(1.0, abs(a), abs(b))
+    return a == b
+
+
+# ------------------------------------------------- source-level sha identity
+@pytest.mark.parametrize("seed", SEEDS)
+def test_theta_iter_jobs_identical_to_jobs(seed):
+    cfg = WorkloadConfig(n_jobs=500, seed=seed)
+    mat = ThetaGenerator(cfg).jobs()
+    lazy = list(ThetaGenerator(cfg).iter_jobs())
+    assert len(mat) == len(lazy)
+    assert all(a == b for a, b in zip(mat, lazy))
+    assert trace_sha256(mat) == trace_sha256(lazy)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+@pytest.mark.parametrize("stream", [False, True])
+def test_swf_iter_jobs_identical_to_jobs(seed, stream):
+    kw = dict(seed=seed, frac_od_projects=0.3)
+    mat = SwfTrace(SAMPLE_SWF, **kw).jobs()
+    lazy = list(SwfTrace(SAMPLE_SWF, stream=stream, **kw).iter_jobs())
+    assert all(a == b for a, b in zip(mat, lazy))
+    assert trace_sha256(mat) == trace_sha256(lazy)
+
+
+def test_swf_stream_mode_never_materializes_record_dicts():
+    src = SwfTrace(SAMPLE_SWF, stream=True)
+    assert src._records is None
+    assert src.n_nodes == 512          # MaxNodes directive, from the scan
+    assert len(list(src.iter_jobs())) == 80
+    assert src._records is None        # still no dict materialization
+
+
+# --------------------------------------------- scenario stacks, both regimes
+STACKS = [
+    (),                                                      # bare source
+    (("load_scale", {"factor": 1.3}),
+     ("diurnal", {"amplitude": 0.5}),
+     ("notice_mix", {"mix": "W2"})),                         # fully streaming
+    (("burst_inject", {"n_bursts": 2, "mix": "W1"}),
+     ("notice_mix", {"mix": "W5"})),                         # fallback path
+]
+
+
+@pytest.mark.parametrize("transforms", STACKS)
+@pytest.mark.parametrize("seed", SEEDS)
+def test_scenario_iter_realize_identity_theta(transforms, seed):
+    sc = Scenario("theta", params={"n_jobs": 300}, transforms=transforms)
+    jobs, n = sc.realize(seed)
+    it, n2 = sc.iter_realize(seed)
+    lazy = list(it)
+    assert n == n2
+    assert all(a == b for a, b in zip(jobs, lazy)) and len(jobs) == len(lazy)
+    assert trace_sha256(jobs) == trace_sha256(lazy)
+
+
+@pytest.mark.parametrize("transforms", STACKS[:2])
+@pytest.mark.parametrize("seed", SEEDS)
+@pytest.mark.parametrize("stream", [False, True])
+def test_scenario_iter_realize_identity_swf(transforms, seed, stream):
+    sc = Scenario("swf", params={"path": SAMPLE_SWF, "stream": stream,
+                                 "frac_od_projects": 0.3},
+                  transforms=transforms)
+    jobs, n = sc.realize(seed)
+    it, n2 = sc.iter_realize(seed)
+    lazy = list(it)
+    assert n == n2
+    assert all(a == b for a, b in zip(jobs, lazy)) and len(jobs) == len(lazy)
+    assert trace_sha256(jobs) == trace_sha256(lazy)
+
+
+def test_streamable_classification():
+    assert Scenario("theta").streamable
+    assert Scenario("theta", transforms=(("load_scale", {"factor": 2.0}),
+                                         ("diurnal", {}),
+                                         ("notice_mix", {}))).streamable
+    assert not Scenario("theta",
+                        transforms=(("burst_inject", {}),)).streamable
+    assert not Scenario("theta", transforms=(("type_mix", {}),)).streamable
+
+
+# --------------------------------------------------- simulator: iterator feed
+def _record_tuples(records):
+    return sorted((r.job.jid, r.first_start, r.completion, r.killed,
+                   r.n_preempted, r.n_shrunk, r.instant) for r in records)
+
+
+@pytest.mark.parametrize("mech", MECHS)
+def test_simulator_iterator_feed_matches_list(mech):
+    wl = WorkloadConfig(n_nodes=4392, n_jobs=500, horizon_days=21.0,
+                        target_load=1.15, seed=0)
+    jobs = generate(wl)
+    cfg = SimConfig(n_nodes=4392, mechanism=mech)
+    a = Simulator(cfg, list(jobs))
+    a.run()
+    b = Simulator(cfg, iter(list(jobs)))
+    b.run()
+    assert _record_tuples(a.records.values()) \
+        == _record_tuples(b.records.values())
+
+
+@pytest.mark.parametrize("mech", MECHS)
+def test_iterator_feed_identical_on_integer_timestamp_ties(mech):
+    """SWF traces carry integer seconds, so job ends collide with later
+    submits constantly.  Lazy ingestion must not reorder those ties:
+    trace events take jid-derived heap seqs below every dynamic event,
+    exactly the order the legacy constructor produced — this trace is
+    built so ends and submits land on the same second hundreds of
+    times."""
+    from repro.core import JobSpec, JobType
+    from repro.core.workloads import canonicalize
+    jobs = canonicalize([
+        JobSpec(-1, JobType.RIGID, f"p{i % 5}", float((i // 4) * 600),
+                64 + 64 * (i % 4), float(600 * (1 + i % 5)),
+                float(600 * (1 + i % 5)))
+        for i in range(400)])
+    cfg = SimConfig(n_nodes=512, mechanism=mech)
+    a = Simulator(cfg, list(jobs))
+    a.run()
+    retired = []
+    b = Simulator(cfg, iter(list(jobs)), record_sink=retired.append)
+    b.run()
+    assert _record_tuples(a.records.values()) == _record_tuples(retired)
+
+
+def test_unsorted_arrival_iterator_is_rejected():
+    """An arrival the clock has already passed must fail loudly.
+    (Inversions that stay inside the lookahead window are harmlessly
+    re-ordered by the event heap; this one cannot be.)"""
+    from repro.core import JobSpec, JobType
+    out_of_order = [
+        JobSpec(0, JobType.RIGID, "p0", 0.0, 8, 600.0, 600.0),
+        JobSpec(1, JobType.RIGID, "p0", 100000.0, 8, 600.0, 600.0),
+        JobSpec(2, JobType.RIGID, "p0", 10.0, 8, 600.0, 600.0),
+    ]
+    sim = Simulator(SimConfig(n_nodes=64, mechanism="BASE"),
+                    iter(out_of_order))
+    with pytest.raises(ValueError, match="out of order"):
+        sim.run()
+
+
+def test_lookahead_shorter_than_notice_lead_raises_clearly():
+    """Notice leads beyond arrival_lookahead must fail loudly (the event
+    would land in the past), and raising the lookahead must fix it."""
+    wl = WorkloadConfig(n_nodes=2048, n_jobs=150, seed=0,
+                        notice_lead=(21600.0, 43200.0))
+    jobs = generate(wl)
+    cfg = SimConfig(n_nodes=2048, mechanism="CUA&SPAA")
+    with pytest.raises(ValueError, match="arrival_lookahead"):
+        Simulator(cfg, iter(list(jobs))).run()
+    ok = Simulator(SimConfig(n_nodes=2048, mechanism="CUA&SPAA",
+                             arrival_lookahead=90000.0), iter(list(jobs)))
+    ok.run()
+    assert len(ok.records) == len(jobs)
+
+
+# ------------------------------------------------ record sink: O(active) RAM
+@pytest.mark.parametrize("mech", MECHS)
+def test_record_sink_bounds_live_job_state(mech):
+    """With a sink installed the simulator must hold O(active) job
+    records — observed live-set high-water far below the trace length —
+    and still produce the exact record stream of the legacy run."""
+    wl = WorkloadConfig(n_nodes=4392, n_jobs=600, horizon_days=21.0,
+                        target_load=1.15, seed=0)
+    jobs = generate(wl)
+    cfg = SimConfig(n_nodes=4392, mechanism=mech)
+    ref = Simulator(cfg, list(jobs))
+    ref.run()
+
+    retired = []
+    peaks = {"records": 0, "jobs": 0}
+    sim = Simulator(cfg, iter(list(jobs)), record_sink=retired.append)
+
+    orig_retire = sim._retire
+
+    def watching_retire(jid, rec):
+        peaks["records"] = max(peaks["records"], len(sim.records))
+        peaks["jobs"] = max(peaks["jobs"], len(sim.jobs))
+        orig_retire(jid, rec)
+
+    sim._retire = watching_retire
+    sim.run()
+
+    assert len(retired) == len(jobs)
+    assert sim.records == {} and sim.jobs == {} and sim.est_remaining == {}
+    assert sim.od_status == {}
+    # live set stays a small fraction of the trace: O(active), not O(total)
+    assert peaks["records"] < len(jobs) // 2, peaks
+    assert _record_tuples(retired) == _record_tuples(ref.records.values())
+
+
+def test_sink_without_iterator_also_retires():
+    wl = WorkloadConfig(n_nodes=2048, n_jobs=200, seed=3)
+    jobs = generate(wl)
+    retired = []
+    sim = Simulator(SimConfig(n_nodes=2048, mechanism="CUA&SPAA"),
+                    list(jobs), record_sink=retired.append)
+    sim.run()
+    assert len(retired) == len(jobs) and sim.records == {}
+
+
+# ------------------------------------------------------- incremental metrics
+def test_streaming_metrics_match_collect():
+    wl = WorkloadConfig(n_nodes=4392, n_jobs=500, horizon_days=21.0,
+                        target_load=1.15, seed=1)
+    jobs = generate(wl)
+    cfg = SimConfig(n_nodes=4392, mechanism="CUA&SPAA")
+    a = Simulator(cfg, list(jobs))
+    a.run()
+    want = collect(a).as_dict()
+    sink = StreamingMetrics(instant_eps=cfg.instant_eps)
+    b = Simulator(cfg, iter(list(jobs)), record_sink=sink)
+    b.run()
+    got = sink.result(b).as_dict()
+    assert set(want) == set(got)
+    for k, v in want.items():
+        assert _close(v, got[k]), (k, v, got[k])
+
+
+def test_welford_and_p2_primitives():
+    rng = np.random.default_rng(7)
+    xs = rng.lognormal(6, 1.0, 5000)
+    w = Welford()
+    for x in xs:
+        w.add(float(x))
+    assert abs(w.mean - xs.mean()) < 1e-8 * xs.mean()
+    assert abs(w.variance - xs.var()) < 1e-6 * xs.var()
+    for p in (0.5, 0.9, 0.99):
+        q = P2Quantile(p)
+        for x in xs:
+            q.add(float(x))
+        exact = float(np.percentile(xs, p * 100))
+        assert abs(q.result() - exact) / exact < 0.05, (p, q.result(), exact)
+    # exact below five observations
+    q = P2Quantile(0.5)
+    for x in (3.0, 1.0, 2.0):
+        q.add(x)
+    assert q.result() == 2.0
+
+
+def test_sink_sees_jobs_that_never_complete():
+    """A job that can never start (size > machine) must still reach the
+    sink when the heap drains, so n_jobs and every ratio denominator
+    match collect()'s over the same trace."""
+    from repro.core import JobSpec, JobType
+    from repro.core.workloads import canonicalize
+    jobs = canonicalize(
+        [JobSpec(-1, JobType.RIGID, "p0", 60.0 * i, 16, 600.0, 600.0)
+         for i in range(10)]
+        + [JobSpec(-1, JobType.RIGID, "p1", 120.0, 9999, 600.0, 600.0)])
+    cfg = SimConfig(n_nodes=64, mechanism="BASE")
+    ref = Simulator(cfg, list(jobs))
+    ref.run()
+    want = collect(ref)
+    sink = StreamingMetrics(instant_eps=cfg.instant_eps)
+    sim = Simulator(cfg, iter(list(jobs)), record_sink=sink)
+    sim.run()
+    got = sink.result(sim)
+    assert got.n_jobs == want.n_jobs == 11
+    assert got.n_completed == want.n_completed == 10
+    assert _close(got.preemption_ratio_rigid, want.preemption_ratio_rigid)
+    assert sim.records == {}
+
+
+def test_streaming_metrics_empty_trace_is_nan_not_crash():
+    sink = StreamingMetrics()
+    sim = Simulator(SimConfig(n_nodes=64, mechanism="BASE"), iter(()),
+                    record_sink=sink)
+    sim.run()
+    m = sink.result(sim)
+    assert m.n_jobs == 0 and math.isnan(m.avg_turnaround_h)
+
+
+# ------------------------------------------------------- experiment streaming
+def test_experiment_stream_mode_matches_materialized():
+    sc = Scenario("theta", params={"n_jobs": 250}, name="W5")
+    kw = dict(mechanisms=MECHS, workloads=(sc,), seeds=(0,), processes=1)
+    rows_m = Experiment(stream=False, **kw).run().rows()
+    rows_s = Experiment(stream=True, **kw).run().rows()
+    for a, b in zip(rows_m, rows_s):
+        for k in a:
+            if k == "elapsed_s":
+                continue
+            assert _close(a[k], b[k]), (k, a[k], b[k])
+
+
+def test_run_stream_checkpoint_resume(tmp_path):
+    sc = Scenario("theta", params={"n_jobs": 150}, name="W5")
+    exp = Experiment(mechanisms=MECHS, workloads=(sc,), seeds=(0, 1),
+                     stream=True, processes=1)
+    ck = str(tmp_path / "progress.json")
+    first = {}
+    for i, r in enumerate(exp.run_stream(checkpoint=ck)):
+        first[(r.spec.mechanism, r.spec.seed)] = r.metrics.avg_turnaround_h
+        if i == 1:
+            break  # abandon mid-sweep; checkpoint holds the finished runs
+    saved = json.load(open(ck))
+    assert len(saved["runs"]) == 2 and saved["n_specs"] == 4
+    resumed = {(r.spec.mechanism, r.spec.seed): r.metrics.avg_turnaround_h
+               for r in exp.run_stream(checkpoint=ck)}
+    assert len(resumed) == 4
+    for k, v in first.items():
+        assert _close(v, resumed[k])
+    # a different grid must refuse the file, not silently misapply it
+    other = Experiment(mechanisms=("BASE",), workloads=(sc,), seeds=(0,),
+                       stream=True, processes=1)
+    with pytest.raises(ValueError, match="different"):
+        list(other.run_stream(checkpoint=ck))
