@@ -1,0 +1,70 @@
+"""Shadow-mode scheduler service benchmark + CI gate.
+
+One row per (scenario, mechanism) cell: replay the scenario through the
+live service loop (ReplayClock at speed=inf, DryrunLauncher validating
+every action) and gate on the tentpole acceptance criteria:
+
+* **fidelity** — the paced decision stream's digest equals the offline
+  reference core's, and job records match a plain Simulator job-for-job
+  (`fidelity_ok`);
+* **SLO** — per-event-batch decision latency p99 < 10 ms (paper Obs 10,
+  `slo_ok` / `decision_p99_ms`).
+
+`track_decision_time` stays off in every run so the decision sequence —
+and therefore the digest — contains no nondeterministic measurement
+state.  Rows land in results/bench/service.json (the CI artifact with
+the latency distribution per cell).
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Sequence, Tuple
+
+from repro.core.workloads import get_scenario
+from repro.service import ServiceConfig, SloPolicy, shadow_fidelity
+
+#: (scenario, mechanism) cells the benchmark sweeps
+CELLS: Tuple[Tuple[str, str], ...] = (
+    ("bursty-od", "CUA&SPAA"),
+    ("bursty-od", "CUP&STEAL"),
+    ("diurnal", "CUA&SPAA"),
+)
+DECISION_P99_BOUND_MS = 10.0   # paper Obs 10
+
+
+def bench_service(cells: Sequence[Tuple[str, str]] = CELLS,
+                  n_jobs: int = 300, seed: int = 0) -> List[dict]:
+    rows = []
+    for scenario, mechanism in cells:
+        scn = get_scenario(scenario, n_jobs=n_jobs)
+        jobs, n_nodes = scn.realize(seed)
+        cfg = ServiceConfig(
+            n_nodes=n_nodes, mechanism=mechanism,
+            slo=SloPolicy(decision_p99_ms=DECISION_P99_BOUND_MS))
+        t0 = time.perf_counter()
+        rep = shadow_fidelity(jobs, cfg)
+        wall = time.perf_counter() - t0
+        svc = rep.service
+        rows.append({
+            "name": f"service_{scenario}_{mechanism.replace('&', '_')}",
+            "scenario": scenario, "mechanism": mechanism,
+            "n_jobs": len(jobs), "n_nodes": n_nodes,
+            "n_decisions": svc.n_decisions,
+            "fidelity_ok": rep.ok,
+            "digests_match": rep.digests_match,
+            "records_match": rep.records_match,
+            "digest": svc.digest,
+            "slo_ok": svc.ok,
+            "decision_p99_ms": round(svc.slo["decision_p99_ms"], 4),
+            "decision_bound_ms": DECISION_P99_BOUND_MS,
+            "latency": svc.latency,
+            "od_wait_p99_s": round(svc.slo["od_wait_p99_s"], 2),
+            "launcher_counts": svc.launcher_counts,
+            "replay_wall_s": svc.wall_s,
+            "seconds": round(wall, 3),
+            "us_per_call": round(wall / max(svc.n_decisions, 1) * 1e6, 1),
+            "derived": (f"decisions={svc.n_decisions},"
+                        f"p99_ms={svc.slo['decision_p99_ms']:.3f},"
+                        f"fidelity={int(rep.ok)},slo={int(svc.ok)}"),
+        })
+    return rows

@@ -15,6 +15,9 @@ writes the full row dicts to results/bench/*.json.  Sections:
               streaming==materialized sha gates,     + BENCH_scheduler.json)
               and the full-year streaming rung
               with per-mode peak RSS
+  service     shadow scheduler service replay:      (results/bench/
+              fidelity digest vs offline simulator   service.json;
+              + decision-latency SLO gates           docs/service.md)
   roofline    per (arch x shape) roofline terms     (EXPERIMENTS §Roofline)
 
 Scale tiers: --quick runs (600, 2k) with the paired pre-PR baseline at
@@ -34,7 +37,8 @@ import subprocess
 import sys
 import time
 
-from . import bench_decision, bench_roofline, bench_scale, bench_scheduler
+from . import (bench_decision, bench_roofline, bench_scale, bench_scheduler,
+               bench_service)
 
 OUT = "results/bench"
 
@@ -207,6 +211,28 @@ def main(argv=None) -> int:
                     and r["speedup"] < bench_scheduler.SCALE_SPEEDUP_TARGET:
                 fail = (f"scale: {r['name']} speedup {r['speedup']}x < "
                         f"{bench_scheduler.SCALE_SPEEDUP_TARGET}x target")
+                print(f"VALIDATION-FAIL,{fail}", file=sys.stderr)
+                failures.append(fail)
+    if want("service"):
+        t0 = time.perf_counter()
+        svc_cells = bench_service.CELLS[:1] if args.quick \
+            else bench_service.CELLS
+        svc_jobs = 150 if args.quick else 300
+        rows = bench_service.bench_service(cells=svc_cells, n_jobs=svc_jobs)
+        _emit("service", rows, t0,
+              dict(prov, seeds=[0], n_jobs=svc_jobs))
+        for r in rows:
+            if not r["fidelity_ok"]:
+                fail = (f"service: {r['name']} shadow decisions diverge "
+                        "from the offline simulator (digests_match="
+                        f"{r['digests_match']}, records_match="
+                        f"{r['records_match']})")
+                print(f"VALIDATION-FAIL,{fail}", file=sys.stderr)
+                failures.append(fail)
+            if not r["slo_ok"]:
+                fail = (f"service: {r['name']} decision p99 "
+                        f"{r['decision_p99_ms']}ms > "
+                        f"{r['decision_bound_ms']}ms bound")
                 print(f"VALIDATION-FAIL,{fail}", file=sys.stderr)
                 failures.append(fail)
     if want("roofline"):

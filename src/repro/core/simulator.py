@@ -221,7 +221,7 @@ class Simulator:
         self.now = max(self.now, t)
 
     def run(self) -> Dict[int, JobRecord]:
-        """Drain the event heap.
+        """Drain the event heap (``step_until(inf)`` + :meth:`finalize`).
 
         Handlers do not re-enter ``_schedule`` per sub-event; they raise
         ``_sched_pending`` and the loop epilogue runs one scheduling pass
@@ -233,10 +233,39 @@ class Simulator:
         event; a newly ingested event earlier than the current top is
         simply popped first.
         """
+        self.step_until(math.inf)
+        self.finalize()
+        return self.records
+
+    def next_event_time(self) -> Optional[float]:
+        """Earliest pending event time, or None when the simulation is
+        drained.  Ingests from a streaming arrival iterator as needed to
+        answer (ingestion order is the same the run loop would use, so
+        peeking never perturbs the event sequence).  This is the pacing
+        signal external drivers (``repro.service``) sleep against."""
+        if self._next_arrival is not None:
+            self._feed()
+        return self._heap[0][0] if self._heap else None
+
+    def step_until(self, t_limit: float) -> Optional[float]:
+        """Process every event with time <= ``t_limit`` and stop.
+
+        The incremental face of :meth:`run`: calling ``step_until`` with
+        any non-decreasing sequence of limits processes the exact event
+        sequence one ``run()`` would (each loop iteration depends only on
+        heap state, never on how the limits partition it), which is what
+        makes an external replay driver decision-for-decision identical
+        to the offline simulator.  Returns the next pending event time
+        (> ``t_limit``) or None when drained; callers that passed a
+        finite limit must eventually call :meth:`finalize` (or
+        :meth:`run`) to flush retained records into a ``record_sink``.
+        """
         heap = self._heap
-        while heap or self._next_arrival is not None:
+        while True:
             if self._next_arrival is not None:
                 self._feed()
+            if not heap or heap[0][0] > t_limit:
+                break
             t, _, kind, data = heapq.heappop(heap)
             self._advance(t)
             getattr(self, f"_on_{kind}")(*data)
@@ -244,13 +273,16 @@ class Simulator:
                 self._sched_pending = False
                 self._schedule()
             self.ledger.check()
+        return heap[0][0] if heap else None
+
+    def finalize(self) -> None:
+        """Flush post-run record retention; idempotent."""
         if self.record_sink is not None and self.records:
             # jobs that never reached an END (e.g. unstartable size):
             # the sink must still see every record or its n_jobs and
             # ratio denominators would diverge from collect()'s
             for jid in list(self.records):
                 self._retire(jid, self.records[jid])
-        return self.records
 
     # ------------------------------------------------------------- submission
     def _on_submit(self, jid: int) -> None:

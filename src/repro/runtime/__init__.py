@@ -1,5 +1,20 @@
-from .elastic import ElasticJob
-from .straggler import StragglerMonitor
+"""repro.runtime — elastic execution on real devices.
+
+`LiveCluster`/`LiveJobInfo` import lazily without jax (PEP 562): the
+scheduling layer is plain Python over the policy registry, so shadow
+tests and the service package use it on CPU-only CI.  `ElasticJob` and
+`StragglerMonitor` pull in jax on first access.
+"""
 from .cluster import LiveCluster, LiveJobInfo
 
 __all__ = ["ElasticJob", "StragglerMonitor", "LiveCluster", "LiveJobInfo"]
+
+_LAZY = {"ElasticJob": "elastic", "StragglerMonitor": "straggler"}
+
+
+def __getattr__(name: str):
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+    return getattr(importlib.import_module(f".{mod}", __name__), name)

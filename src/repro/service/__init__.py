@@ -1,0 +1,35 @@
+"""repro.service — the scheduler daemon over the policy engine.
+
+A live, policy-driven control plane: the same registered Notice /
+Arrival / Queue / Elasticity policies that drive offline simulations
+(``repro.core.policy``) schedule real workloads here — on-demand jobs
+are inference demand, malleable jobs are elastic training runs — with
+decisions appended to a structured JSONL log whose digest must match an
+offline Simulator run on the same trace (the shadow-mode contract;
+docs/service.md).
+
+Deliberately jax-free at import: shadow mode (ReplayClock +
+DryrunLauncher) runs on CPU-only CI; only LiveClusterLauncher touches
+the elastic runtime, and only through the cluster object handed to it.
+"""
+from .admission import AdmissionQueue
+from .clock import ReplayClock
+from .core import ServiceCore
+from .daemon import (FidelityReport, SchedulerService, ServiceConfig,
+                     ShadowReport, shadow_fidelity)
+from .decisionlog import (MEASUREMENT_KEYS, DecisionLog, decision_digest,
+                          read_decision_log)
+from .launchers import (DryrunLauncher, Launcher, LiveClusterLauncher,
+                        NullLauncher, ShadowLaunchError, plan_requests)
+from .slo import SloMonitor, SloPolicy, SloReport
+
+__all__ = [
+    "AdmissionQueue", "ReplayClock", "ServiceCore",
+    "FidelityReport", "SchedulerService", "ServiceConfig", "ShadowReport",
+    "shadow_fidelity",
+    "MEASUREMENT_KEYS", "DecisionLog", "decision_digest",
+    "read_decision_log",
+    "DryrunLauncher", "Launcher", "LiveClusterLauncher", "NullLauncher",
+    "ShadowLaunchError", "plan_requests",
+    "SloMonitor", "SloPolicy", "SloReport",
+]

@@ -1,0 +1,119 @@
+"""Admission queue: the live service's front door.
+
+Producers (an API handler, an example script, a test) submit work as
+:class:`~repro.core.job.JobSpec`-shaped requests; the daemon drains the
+queue between event batches and feeds specs to ``ServiceCore.admit``.
+Thread-safe and bounded-free — on-demand inference requests and
+malleable training submissions go through the same door, mirroring the
+paper's hybrid workload.
+
+Convenience constructors map service-level requests onto the spec
+fields the policy stack understands:
+
+* :meth:`AdmissionQueue.submit_inference` — an ONDEMAND job (the node
+  demand of a serving burst), with optional advance notice so
+  notice-aware mechanisms (CUA/CUP) can pre-vacate;
+* :meth:`AdmissionQueue.submit_training` — a MALLEABLE job (an elastic
+  training run the cluster may shrink for on-demand traffic);
+* :meth:`AdmissionQueue.submit_rigid` — a RIGID batch job.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+from collections import deque
+from typing import List, Optional
+
+from repro.core.job import JobSpec, JobType, NoticeKind
+
+
+class AdmissionQueue:
+    """Thread-safe FIFO of admitted :class:`JobSpec`.
+
+    ``base_jid`` seeds the jid allocator; keep it above any replayed
+    trace's jid range when mixing live admissions into a replay.
+    """
+
+    def __init__(self, base_jid: int = 1_000_000):
+        self._q: deque = deque()
+        self._lock = threading.Lock()
+        self._jids = itertools.count(base_jid)
+        self._closed = False
+        self.n_submitted = 0
+
+    # ------------------------------------------------------------- plumbing
+    def put(self, spec: JobSpec) -> JobSpec:
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("admission queue is closed")
+            self._q.append(spec)
+            self.n_submitted += 1
+        return spec
+
+    def drain(self) -> List[JobSpec]:
+        """Remove and return every pending spec (daemon-side)."""
+        with self._lock:
+            out = list(self._q)
+            self._q.clear()
+        return out
+
+    def close(self) -> None:
+        """No further submissions; the daemon drains what remains and
+        exits once the core is idle."""
+        with self._lock:
+            self._closed = True
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._q)
+
+    def _next_jid(self, jid: Optional[int]) -> int:
+        return next(self._jids) if jid is None else jid
+
+    # ----------------------------------------------------------- front door
+    def submit_inference(self, nodes: int, hold_s: float,
+                         submit_time: float = 0.0, *,
+                         notice_lead_s: Optional[float] = None,
+                         project: str = "serve",
+                         jid: Optional[int] = None) -> JobSpec:
+        """On-demand serving demand: ``nodes`` for ``hold_s`` seconds.
+        ``notice_lead_s`` announces it that many seconds ahead (clamped
+        by the core if the lead is already in the past)."""
+        notice = NoticeKind.NONE if notice_lead_s is None else NoticeKind.ACCURATE
+        return self.put(JobSpec(
+            jid=self._next_jid(jid), jtype=JobType.ONDEMAND, project=project,
+            submit_time=submit_time, size=nodes,
+            t_estimate=hold_s, t_actual=hold_s,
+            notice_kind=notice,
+            notice_time=None if notice_lead_s is None
+            else submit_time - notice_lead_s,
+            est_arrival=None if notice_lead_s is None else submit_time))
+
+    def submit_training(self, n_max: int, runtime_s: float,
+                        submit_time: float = 0.0, *, n_min: int = 0,
+                        estimate_s: Optional[float] = None,
+                        setup_s: float = 0.0, project: str = "train",
+                        jid: Optional[int] = None) -> JobSpec:
+        """Elastic (malleable) training run: may run anywhere in
+        [n_min, n_max] nodes; ``runtime_s`` is the full-size runtime."""
+        return self.put(JobSpec(
+            jid=self._next_jid(jid), jtype=JobType.MALLEABLE, project=project,
+            submit_time=submit_time, size=n_max,
+            t_estimate=estimate_s or runtime_s * 1.5, t_actual=runtime_s,
+            t_setup=setup_s, n_min=n_min))
+
+    def submit_rigid(self, nodes: int, runtime_s: float,
+                     submit_time: float = 0.0, *,
+                     estimate_s: Optional[float] = None,
+                     setup_s: float = 0.0, project: str = "batch",
+                     jid: Optional[int] = None) -> JobSpec:
+        """Fixed-size batch job."""
+        return self.put(JobSpec(
+            jid=self._next_jid(jid), jtype=JobType.RIGID, project=project,
+            submit_time=submit_time, size=nodes,
+            t_estimate=estimate_s or runtime_s * 1.5, t_actual=runtime_s,
+            t_setup=setup_s))

@@ -1,0 +1,138 @@
+"""ServiceCore: the scheduler daemon's decision engine.
+
+Fidelity by construction — ServiceCore IS the offline
+:class:`repro.core.Simulator`, subclassed to narrate.  It overrides the
+simulator's placement primitives (`_begin_run`, `_preempt`, `_shrink`,
+`_expand`, `_on_end`, `_on_od_timeout`) to emit one structured decision
+row per action and forward it to a :class:`~repro.service.launchers.
+Launcher`; it adds no logic of its own, so the decision sequence a paced
+replay produces (``step_until`` with the daemon's non-decreasing limits)
+is bit-identical to what one offline ``run()`` on the same trace +
+mechanism produces.  That identity, fingerprinted by
+:func:`~repro.service.decisionlog.decision_digest`, is the shadow-mode
+contract (docs/service.md).
+
+Launcher hooks fire *before* the superclass mutates state: a preempt/end
+frees nodes that the same event may immediately hand to an expand, and a
+validating launcher's mirror ledger must see the release first or it
+would report a phantom over-commit.  (`finish` therefore receives the
+record before ``completion`` is stamped — backends key on ``rec.job``.)
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import replace
+from typing import Callable, Dict, Iterable, List, Optional
+
+from repro.core.job import JobSpec, NoticeKind
+from repro.core.simulator import JobRecord, SimConfig, Simulator
+
+from .launchers import Launcher, NullLauncher
+
+
+class ServiceCore(Simulator):
+    """A Simulator that narrates every placement decision.
+
+    Decisions accumulate in ``self._pending`` until the daemon drains
+    them (:meth:`drain_decisions`) into the decision log — the core
+    never blocks on I/O inside an event handler, so decision latency
+    measures scheduling, not logging.
+    """
+
+    def __init__(self, cfg: SimConfig, jobs: Iterable[JobSpec],
+                 launcher: Optional[Launcher] = None,
+                 record_sink: Optional[Callable[[JobRecord], None]] = None):
+        # narration state must exist before super().__init__ ingests jobs
+        self.launcher = launcher or NullLauncher()
+        self._pending: List[Dict] = []
+        self._dseq = itertools.count()
+        self.n_decisions = 0
+        super().__init__(cfg, jobs, record_sink=record_sink)
+
+    # ------------------------------------------------------------- narration
+    def _emit(self, event: str, jid: int, **detail) -> None:
+        row = {"seq": next(self._dseq), "t_sim": round(self.now, 6),
+               "event": event, "jid": jid}
+        row.update(detail)
+        self._pending.append(row)
+        self.n_decisions += 1
+
+    def drain_decisions(self) -> List[Dict]:
+        """Hand off (and clear) the decisions emitted since the last
+        drain — the daemon appends them to the DecisionLog."""
+        out, self._pending = self._pending, []
+        return out
+
+    # ----------------------------------------------------- live-mode ingress
+    def admit(self, job: JobSpec) -> JobSpec:
+        """Admit a job submitted to the *live* service (not replayed from
+        a trace).  Times are clamped to the current clock so an admission
+        racing the event loop can never submit in the past; returns the
+        (possibly adjusted) spec actually ingested.  Only valid on the
+        materialized path (live cores are built with ``jobs=[]``)."""
+        if self._arrivals is not None:
+            raise RuntimeError("admit() on a trace-replaying core; live "
+                               "admission needs a core built with jobs=[]")
+        if job.jid in self.jobs or job.jid in self.records:
+            raise ValueError(f"duplicate admission of jid {job.jid}")
+        fix = {}
+        if job.submit_time < self.now:
+            fix["submit_time"] = self.now
+        if job.notice_kind is not NoticeKind.NONE:
+            if job.notice_time is None or job.notice_time < self.now:
+                fix["notice_time"] = self.now
+            if job.est_arrival is None or \
+                    job.est_arrival < fix.get("submit_time", job.submit_time):
+                fix["est_arrival"] = fix.get("submit_time", job.submit_time)
+        if fix:
+            job = replace(job, **fix)
+        self._ingest(job)
+        self._emit("admit", job.jid, jtype=job.jtype.value,
+                   submit_time=round(job.submit_time, 6), size=job.size)
+        return job
+
+    # ----------------------------------------------- narrated sim primitives
+    def _begin_run(self, jid: int, size: int) -> None:
+        job = self.jobs[jid]
+        restart = jid in self.progress   # carry-over => restart after preempt
+        self.launcher.start_job(job, size)
+        self._emit("start", jid, size=size, jtype=job.jtype.value,
+                   restart=restart)
+        super()._begin_run(jid, size)
+
+    def _preempt(self, jid: int, beneficiary: Optional[int] = None) -> None:
+        rs = self.running[jid]
+        self.launcher.preempt(rs.job)
+        self._emit("preempt", jid, size=rs.cur_size, beneficiary=beneficiary)
+        super()._preempt(jid, beneficiary=beneficiary)
+
+    def _shrink(self, jid: int, k: int, od: int) -> None:
+        rs = self.running[jid]
+        new_size = rs.cur_size - k
+        self.launcher.resize(rs.job, new_size)
+        self._emit("shrink", jid, k=k, new_size=new_size, od=od)
+        super()._shrink(jid, k, od)
+
+    def _expand(self, jid: int, k: int) -> None:
+        rs = self.running[jid]
+        grow = min(k, rs.job.n_max - rs.cur_size)
+        if grow > 0:
+            self.launcher.resize(rs.job, rs.cur_size + grow)
+            self._emit("expand", jid, k=grow, new_size=rs.cur_size + grow)
+        super()._expand(jid, k)
+
+    def _on_end(self, jid: int, epoch: int) -> None:
+        rs = self.running.get(jid)
+        if rs is not None and rs.epoch == epoch:   # not a stale END event
+            killed = rs.work_done(self.now) < rs.job.work - 1e-6
+            self.launcher.finish(self.records[jid])
+            self._emit("end", jid, size=rs.cur_size, killed=killed,
+                       jtype=rs.job.jtype.value)
+        super()._on_end(jid, epoch)
+
+    def _on_od_timeout(self, jid: int) -> None:
+        fired = self.od_status.get(jid) == "noticed"
+        released = self.ledger.reserved_of(jid) if fired else 0
+        super()._on_od_timeout(jid)
+        if fired:
+            self._emit("od_timeout", jid, released=released)

@@ -1,0 +1,128 @@
+"""Structured JSONL decision log + the shadow-fidelity digest.
+
+Every placement decision the service core makes is appended as one JSON
+line.  Two kinds of field live in a row:
+
+* **deterministic** fields — ``seq``, ``t_sim``, ``event``, ``jid`` and
+  the per-event detail (size, victim, beneficiary, ...).  These are a
+  pure function of (trace, mechanism) and feed the fidelity digest: a
+  sha256 over the canonical rendering of every deterministic row, which
+  must equal the digest of an offline :class:`repro.core.Simulator` run
+  on the same trace + mechanism (the shadow-mode contract).
+* **measurement** fields — ``wall`` (human-readable wall-clock ISO
+  stamp), ``mono`` (monotonic seconds), ``latency_ms`` (wall latency of
+  the event batch that produced the decision).  These vary run to run
+  and are excluded from the digest.
+
+Schema (see docs/service.md for the full table)::
+
+    {"seq": 12, "t_sim": 5400.0, "event": "start", "jid": 7,
+     "size": 128, "jtype": "malleable",
+     "wall": "2026-08-08T12:00:01Z", "mono": 123.456, "latency_ms": 0.41}
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import time
+from typing import Dict, Iterable, List, Optional
+
+import numpy as np
+
+#: row keys that are measurements, not decisions (digest-excluded)
+MEASUREMENT_KEYS = ("wall", "mono", "latency_ms")
+
+
+def _canonical(row: Dict) -> bytes:
+    """Stable rendering of a row's deterministic fields."""
+    det = {k: v for k, v in row.items() if k not in MEASUREMENT_KEYS}
+    return json.dumps(det, sort_keys=True, separators=(",", ":"),
+                      default=str).encode()
+
+
+def decision_digest(rows: Iterable[Dict]) -> str:
+    """Order-sensitive sha256 over the deterministic fields of every
+    decision row — the fidelity fingerprint compared between the live
+    service and the offline simulator."""
+    h = hashlib.sha256()
+    for row in rows:
+        h.update(_canonical(row))
+        h.update(b"\n")
+    return h.hexdigest()
+
+
+class DecisionLog:
+    """Append-only JSONL writer with an incremental fidelity digest and
+    an in-memory latency series for the SLO monitor.
+
+    ``path=None`` keeps everything in memory (tests, fidelity reference
+    runs); with a path each row is written and flushed as it is appended
+    so a crashed daemon leaves a complete prefix on disk.
+    """
+
+    def __init__(self, path: Optional[str] = None, keep_rows: bool = True):
+        self.path = path
+        self.keep_rows = keep_rows
+        self.rows: List[Dict] = []
+        self.n_rows = 0
+        self.latencies_ms: List[float] = []
+        self._sha = hashlib.sha256()
+        self._fh = open(path, "w") if path else None
+
+    def append(self, decision: Dict, *, latency_ms: Optional[float] = None,
+               mono: Optional[float] = None) -> Dict:
+        """Append one decision; measurement fields are added here so the
+        deterministic part stays exactly what the core emitted."""
+        row = dict(decision)
+        row["wall"] = time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime())
+        row["mono"] = time.monotonic() if mono is None else mono
+        if latency_ms is not None:
+            row["latency_ms"] = round(latency_ms, 4)
+            self.latencies_ms.append(latency_ms)
+        self._sha.update(_canonical(row))
+        self._sha.update(b"\n")
+        self.n_rows += 1
+        if self.keep_rows:
+            self.rows.append(row)
+        if self._fh is not None:
+            self._fh.write(json.dumps(row, sort_keys=True, default=str) + "\n")
+            self._fh.flush()
+        return row
+
+    @property
+    def digest(self) -> str:
+        """Digest over every row appended so far (incremental — safe on
+        logs too large to retain in memory)."""
+        return self._sha.hexdigest()
+
+    def latency_summary(self) -> Dict[str, float]:
+        """Decision-latency distribution in milliseconds."""
+        if not self.latencies_ms:
+            return {"n": 0, "p50_ms": float("nan"), "p90_ms": float("nan"),
+                    "p99_ms": float("nan"), "max_ms": float("nan")}
+        lat = np.asarray(self.latencies_ms, dtype=np.float64)
+        p50, p90, p99 = np.percentile(lat, (50, 90, 99))
+        return {"n": int(lat.size), "p50_ms": float(p50), "p90_ms": float(p90),
+                "p99_ms": float(p99), "max_ms": float(lat.max())}
+
+    def close(self) -> None:
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+
+    def __enter__(self) -> "DecisionLog":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def read_decision_log(path: str) -> List[Dict]:
+    """Load a JSONL decision log back into row dicts."""
+    rows = []
+    with open(path) as fh:
+        for line in fh:
+            line = line.strip()
+            if line:
+                rows.append(json.loads(line))
+    return rows

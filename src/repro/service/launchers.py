@@ -1,0 +1,217 @@
+"""Launch backends: how the service's decisions become execution.
+
+The decision core narrates placements (start / resize / preempt /
+finish); a :class:`Launcher` turns them into work:
+
+    DryrunLauncher       shadow mode (CPU-only CI): no model runs, but
+                         the action stream is *validated* against a node
+                         ledger — an illegal sequence (double start,
+                         resize of a non-running job, capacity overflow)
+                         raises ShadowLaunchError, in the spirit of
+                         repro.launch.dryrun proving configs coherent
+                         without hardware.  On-demand starts synthesize
+                         the deterministic inference-request batch that
+                         WOULD be admitted to ServeEngine.
+    LiveClusterLauncher  decisions drive a real LiveCluster: batch jobs
+                         become ElasticJob training runs, on-demand
+                         starts vacate nodes through the cluster's own
+                         registry-resolved arrival policy and serve an
+                         inference batch, leases return on completion.
+
+A launcher never makes decisions — it executes (or records) them, so a
+shadow run and a live run see the identical decision sequence.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from repro.core.job import JobSpec, JobType
+from repro.core.simulator import JobRecord
+
+
+class ShadowLaunchError(RuntimeError):
+    """The decision stream asked the launcher for an impossible action —
+    a scheduler-core invariant was violated."""
+
+
+class Launcher:
+    """No-op base; every hook receives already-made decisions."""
+
+    def start_job(self, job: JobSpec, size: int) -> None:
+        """Job placed on ``size`` nodes (on-demand included)."""
+
+    def resize(self, job: JobSpec, new_size: int) -> None:
+        """Running malleable shrunk/expanded to ``new_size`` nodes."""
+
+    def preempt(self, job: JobSpec) -> None:
+        """Running job vacated (will re-queue and start again later)."""
+
+    def finish(self, rec: JobRecord) -> None:
+        """Job reached its END event (record carries completion state)."""
+
+    def tick(self) -> None:
+        """Called once per daemon loop iteration — live backends use it
+        to advance real work (training steps) between decisions."""
+
+    def close(self) -> None:
+        """Replay drained; release any live resources."""
+
+
+class NullLauncher(Launcher):
+    """Decisions logged, nothing executed (fidelity reference runs)."""
+
+
+def plan_requests(job: JobSpec, max_batch: int = 8,
+                  vocab: int = 1024) -> List[dict]:
+    """The deterministic inference-request batch an on-demand job admits
+    to the serving engine: one request per node up to ``max_batch``,
+    prompt length and token budget derived from the jid so shadow and
+    live runs plan the identical batch."""
+    n = max(1, min(int(job.size), max_batch))
+    return [{"rid": job.jid * max_batch + i,
+             "prompt_len": 8 + (job.jid * 7 + i * 3) % 56,
+             "max_new_tokens": 16,
+             "vocab": vocab}
+            for i in range(n)]
+
+
+@dataclass
+class _ShadowJob:
+    size: int
+    jtype: str
+    n_starts: int = 1
+    n_resizes: int = 0
+    n_preempts: int = 0
+
+
+class DryrunLauncher(Launcher):
+    """Validating shadow backend.
+
+    Keeps a node-count ledger mirroring what execution would occupy and
+    checks every action against it; records a per-job action history and
+    aggregate counters (the benchmark/CI artifact).  ``n_nodes=None``
+    skips the capacity check (unknown machine size).
+    """
+
+    def __init__(self, n_nodes: Optional[int] = None):
+        self.n_nodes = n_nodes
+        self.active: Dict[int, _ShadowJob] = {}
+        self.counts: Dict[str, int] = {
+            "start": 0, "od_start": 0, "resize": 0, "preempt": 0,
+            "finish": 0, "requests_planned": 0}
+        self.request_plans: Dict[int, List[dict]] = {}
+
+    # ------------------------------------------------------------- helpers
+    def _occupied(self) -> int:
+        return sum(j.size for j in self.active.values())
+
+    def _check_capacity(self) -> None:
+        if self.n_nodes is not None and self._occupied() > self.n_nodes:
+            raise ShadowLaunchError(
+                f"decision stream over-commits the machine: "
+                f"{self._occupied()} > {self.n_nodes} nodes occupied")
+
+    # --------------------------------------------------------------- hooks
+    def start_job(self, job: JobSpec, size: int) -> None:
+        if job.jid in self.active:
+            raise ShadowLaunchError(f"job {job.jid} started while running")
+        if size <= 0:
+            raise ShadowLaunchError(f"job {job.jid} started on {size} nodes")
+        self.active[job.jid] = _ShadowJob(size=size, jtype=job.jtype.value)
+        self._check_capacity()
+        self.counts["start"] += 1
+        if job.jtype is JobType.ONDEMAND:
+            self.counts["od_start"] += 1
+            plan = plan_requests(job)
+            self.request_plans[job.jid] = plan
+            self.counts["requests_planned"] += len(plan)
+
+    def resize(self, job: JobSpec, new_size: int) -> None:
+        sj = self.active.get(job.jid)
+        if sj is None:
+            raise ShadowLaunchError(f"resize of non-running job {job.jid}")
+        if not (0 < new_size <= job.n_max) or \
+                (job.jtype is JobType.MALLEABLE and new_size < job.n_min):
+            raise ShadowLaunchError(
+                f"job {job.jid} resized to {new_size} outside "
+                f"[{job.n_min}, {job.n_max}]")
+        sj.size = new_size
+        sj.n_resizes += 1
+        self._check_capacity()
+        self.counts["resize"] += 1
+
+    def preempt(self, job: JobSpec) -> None:
+        sj = self.active.pop(job.jid, None)
+        if sj is None:
+            raise ShadowLaunchError(f"preempt of non-running job {job.jid}")
+        self.counts["preempt"] += 1
+
+    def finish(self, rec: JobRecord) -> None:
+        if self.active.pop(rec.job.jid, None) is None:
+            raise ShadowLaunchError(
+                f"finish of non-running job {rec.job.jid}")
+        self.counts["finish"] += 1
+
+    def close(self) -> None:
+        if self.active:
+            raise ShadowLaunchError(
+                f"replay drained with jobs still marked running: "
+                f"{sorted(self.active)}")
+
+
+class LiveClusterLauncher(Launcher):
+    """Execute decisions on a real :class:`repro.runtime.LiveCluster`.
+
+    ``job_factory(job: JobSpec) -> ElasticJob`` builds the training
+    payload for rigid/malleable jobs; ``serve_fn(job, node_ids)`` (if
+    given) runs the inference batch for an on-demand start on the nodes
+    the cluster vacated.  The *cluster's own* registry-resolved arrival
+    policy picks shrink/preemption victims when on-demand demand arrives
+    — the service's shadow ledger stays authoritative for WHAT starts
+    WHEN, the cluster for WHICH physical nodes move (see
+    docs/service.md).  Shrink/expand decisions for batch jobs are
+    handled by the cluster's own lease mechanics, so :meth:`resize` and
+    :meth:`preempt` only track counters here.
+    """
+
+    def __init__(self, cluster, job_factory: Callable[[JobSpec], object],
+                 serve_fn: Optional[Callable[[JobSpec, List[int]], object]]
+                 = None, steps_per_tick: int = 1,
+                 target_steps: int = 20):
+        self.cluster = cluster
+        self.job_factory = job_factory
+        self.serve_fn = serve_fn
+        self.steps_per_tick = steps_per_tick
+        self.target_steps = target_steps
+        self.od_nodes: Dict[int, List[int]] = {}
+        self.infos: Dict[int, object] = {}
+        self.served: List[object] = []
+
+    def start_job(self, job: JobSpec, size: int) -> None:
+        if job.jtype is JobType.ONDEMAND:
+            nodes = self.cluster.acquire_for_ondemand(size)
+            self.od_nodes[job.jid] = nodes
+            if self.serve_fn is not None:
+                self.served.append(self.serve_fn(job, nodes))
+            return
+        if job.jid in self.infos:       # restart after preemption
+            return                      # cluster resumes it on free nodes
+        ej = self.job_factory(job)
+        n_min = job.n_min if job.jtype is JobType.MALLEABLE else size
+        self.infos[job.jid] = self.cluster.submit(
+            ej, min_nodes=max(1, n_min), max_nodes=size,
+            target_steps=self.target_steps)
+
+    def finish(self, rec: JobRecord) -> None:
+        nodes = self.od_nodes.pop(rec.job.jid, None)
+        if nodes is not None:
+            self.cluster.release_ondemand(nodes)
+
+    def tick(self) -> None:
+        self.cluster.step_all(self.steps_per_tick)
+
+    def close(self) -> None:
+        for jid, nodes in list(self.od_nodes.items()):
+            self.cluster.release_ondemand(nodes)
+            del self.od_nodes[jid]

@@ -21,10 +21,20 @@ from repro.models.config import ModelConfig
 
 @dataclass
 class Request:
+    """One inference request.
+
+    ``submitted_at`` / ``first_token_at`` / ``done_at`` are monotonic
+    timestamps (``time.monotonic``): they exist to be subtracted — TTFB,
+    decode time, SLO accounting — and must not jump with wall-clock
+    adjustments.  ``submitted_wall`` is the one wall-clock stamp, kept
+    for human-readable logs; never diff it against the monotonic fields.
+    """
+
     rid: int
     prompt: np.ndarray            # (S,) int32
     max_new_tokens: int = 32
-    submitted_at: float = field(default_factory=time.time)
+    submitted_at: float = field(default_factory=time.monotonic)
+    submitted_wall: float = field(default_factory=time.time)
     tokens_out: List[int] = field(default_factory=list)
     first_token_at: Optional[float] = None
     done_at: Optional[float] = None
@@ -64,7 +74,7 @@ class ServeEngine:
         next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         live = np.ones((B,), bool)
         n_steps = max(r.max_new_tokens for r in requests)
-        now = time.time()
+        now = time.monotonic()
         for i, r in enumerate(requests):
             r.first_token_at = now
             r.tokens_out.append(int(next_tok[i]))
@@ -83,10 +93,10 @@ class ServeEngine:
                 if len(r.tokens_out) >= r.max_new_tokens or \
                         (self.eos_id is not None and toks_np[i] == self.eos_id):
                     live[i] = False
-                    r.done_at = time.time()
+                    r.done_at = time.monotonic()
             if not live.any():
                 break
-        now = time.time()
+        now = time.monotonic()
         for r in requests:
             r.done_at = r.done_at or now
         return requests

@@ -1,0 +1,196 @@
+"""LiveCluster scheduling mechanics, driven by duck-typed fake jobs.
+
+LiveCluster's scheduling layer is plain Python over the policy registry
+(ElasticJob is a type-only import), so these tests run jax-free in
+tier-1 CI and again in the kernels job.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.core.policy import UnknownPolicyError
+from repro.runtime import LiveCluster
+
+
+class FakeElasticJob:
+    """Duck-type of repro.runtime.ElasticJob's scheduling surface."""
+
+    def __init__(self, jid, kind="malleable", ckpt_every=50,
+                 ckpt_dir="/tmp/ckpt"):
+        self.jid = jid
+        self.kind = kind
+        self.ckpt_every = ckpt_every
+        self.ckpt_dir = ckpt_dir
+        self.state = None
+        self.step_idx = 0
+        self.events = []
+
+    def start(self, devices):
+        self.state = object()
+        self.events.append(("start", len(devices)))
+
+    def resume(self, devices):
+        self.events.append(("resume", len(devices)))
+
+    def step(self):
+        self.step_idx += 1
+        return {}
+
+    def preempt(self, warning=True):
+        self.events.append(("preempt", warning))
+
+    def resize(self, devices):
+        self.events.append(("resize", len(devices)))
+        return 0.01
+
+
+def _cluster(n=8, **kw):
+    return LiveCluster([f"dev{i}" for i in range(n)], **kw)
+
+
+def test_import_is_jax_free():
+    """Importing LiveCluster must not pull in jax (CPU-only CI contract).
+    Checked in a fresh interpreter: this process may have jax loaded
+    from sibling test modules."""
+    code = ("import sys; from repro.runtime import LiveCluster; "
+            "sys.exit(1 if 'jax' in sys.modules else 0)")
+    proc = subprocess.run([sys.executable, "-c", code],
+                          env={**os.environ,
+                               "PYTHONPATH": os.pathsep.join(sys.path)})
+    assert proc.returncode == 0
+
+
+def test_unknown_policies_raise():
+    with pytest.raises(UnknownPolicyError):
+        _cluster(arrival_policy="NOPE")
+    with pytest.raises(UnknownPolicyError):
+        _cluster(elasticity_policy="NADA")
+
+
+def test_default_policy_pairing():
+    assert _cluster().arrival_policy == "SPAA"
+    assert _cluster().elasticity_policy == "NONE"
+    c = _cluster(arrival_policy="STEAL")
+    assert c.elasticity_policy == "BALANCE"   # preferred pairing
+    c2 = _cluster(arrival_policy="PAA", elasticity_policy="BALANCE")
+    assert (c2.arrival_policy, c2.elasticity_policy) == ("PAA", "BALANCE")
+
+
+def test_submit_starts_malleable_at_available_width():
+    c = _cluster(8)
+    info = c.submit(FakeElasticJob(1), min_nodes=2, max_nodes=6)
+    assert info.status == "running" and len(info.node_ids) == 6
+    info2 = c.submit(FakeElasticJob(2), min_nodes=3, max_nodes=4)
+    assert info2.status == "waiting"          # only 2 free < min_nodes
+    assert c.utilization() == 6 / 8
+
+
+def test_rigid_requires_full_width():
+    c = _cluster(4)
+    info = c.submit(FakeElasticJob(1, kind="rigid"), min_nodes=2, max_nodes=3)
+    assert info.status == "running" and len(info.node_ids) == 3
+    info2 = c.submit(FakeElasticJob(2, kind="rigid"), min_nodes=1, max_nodes=2)
+    assert info2.status == "waiting"          # 1 free < rigid width 2
+
+
+def test_step_all_finishes_and_restarts_waiting():
+    c = _cluster(4)
+    a = c.submit(FakeElasticJob(1), min_nodes=2, max_nodes=4, target_steps=3)
+    b = c.submit(FakeElasticJob(2), min_nodes=2, max_nodes=2, target_steps=3)
+    assert (a.status, b.status) == ("running", "waiting")
+    c.step_all(3)
+    assert a.status == "done"
+    assert b.status == "running"              # restarted on freed nodes
+    assert len(c.free) == 2
+
+
+def test_ondemand_from_free_pool_only():
+    c = _cluster(8)
+    c.submit(FakeElasticJob(1), min_nodes=2, max_nodes=4)
+    got = c.acquire_for_ondemand(3)
+    assert len(got) == 3 and len(c.free) == 1
+    assert c.jobs[1].shrink_count == 0        # free pool sufficed
+    c.release_ondemand(got)
+    assert len(c.free) == 4
+
+
+def test_spaa_shrinks_then_lease_repays():
+    c = _cluster(8)
+    j = FakeElasticJob(1)
+    c.submit(j, min_nodes=2, max_nodes=6)
+    c.submit(FakeElasticJob(2, kind="rigid"), min_nodes=2, max_nodes=2)
+    got = c.acquire_for_ondemand(4)           # 0 free: shrink 6 -> 2
+    assert len(got) == 4
+    assert len(c.jobs[1].node_ids) == 2 and c.jobs[1].shrink_count == 1
+    assert ("resize", 2) in j.events
+    c.release_ondemand(got)                   # §III-B3: lender repaid
+    assert len(c.jobs[1].node_ids) == 6
+    assert ("resize", 6) in j.events
+    assert c.jobs[1].preempt_count == 0
+
+
+def test_paa_fallback_preempts_ascending_overhead():
+    c = _cluster(8)
+    cheap = FakeElasticJob(1, kind="rigid", ckpt_every=5)
+    dear = FakeElasticJob(2, kind="rigid", ckpt_every=5)
+    c.submit(cheap, min_nodes=4, max_nodes=4, target_steps=100)
+    c.submit(dear, min_nodes=4, max_nodes=4, target_steps=100)
+    c.step_all(4)                             # dear == cheap == 4 steps
+    c.jobs[1].steps_done = 5                  # cheap: just checkpointed
+    got = c.acquire_for_ondemand(4)
+    assert len(got) == 4
+    assert c.jobs[1].status == "preempted"    # lowest overhead victim
+    assert c.jobs[2].status == "running"
+    c.release_ondemand(got)
+    assert c.jobs[1].status == "running"      # resumed after release
+
+
+def test_acquire_failure_raises_without_side_effects():
+    c = _cluster(4)
+    with pytest.raises(ValueError):
+        c.acquire_for_ondemand(5)             # more than the machine
+    info = c.submit(FakeElasticJob(1), min_nodes=4, max_nodes=4)
+    before = list(info.node_ids)
+    got = c.acquire_for_ondemand(4)           # must preempt (no slack)
+    assert c.jobs[1].status == "preempted"
+    c.release_ondemand(got)
+    assert sorted(c.jobs[1].node_ids) == sorted(before)
+
+
+def test_balance_elasticity_expands_on_idle():
+    c = _cluster(8, arrival_policy="STEAL")
+    c.submit(FakeElasticJob(1), min_nodes=2, max_nodes=8)
+    got = c.acquire_for_ondemand(4)           # steal 8 -> 4
+    assert len(c.jobs[1].node_ids) == 4
+    c.release_ondemand(got)
+    assert len(c.jobs[1].node_ids) == 8       # repaid back to n_max
+    # finish a coexisting job: BALANCE absorbs the idle nodes
+    c2 = _cluster(8, arrival_policy="STEAL")
+    j1 = FakeElasticJob(1)
+    c2.submit(j1, min_nodes=2, max_nodes=8, target_steps=50)
+    # j1 grabbed all 8; vacate 2 so a short job can run beside it
+    got2 = c2.acquire_for_ondemand(2)
+    c2.free.extend(got2)                      # demand evaporates unleased
+    c2.submit(FakeElasticJob(2), min_nodes=2, max_nodes=2, target_steps=1)
+    assert len(c2.jobs[1].node_ids) == 6
+    c2.step_all(1)                            # job 2 finishes
+    assert c2.jobs[2].status == "done"
+    assert len(c2.jobs[1].node_ids) == 8      # on_idle grew j1 back
+    assert len(c2.free) == 0
+
+
+def test_event_log_uses_monotonic_relative_time():
+    c = _cluster(4)
+    c.submit(FakeElasticJob(1), min_nodes=2, max_nodes=4)
+    assert c.started_wall > 1e9               # the wall-clock anchor
+    assert all(0.0 <= row["t"] < 60.0 for row in c.log)
+    assert [r["event"] for r in c.log] == ["start"]
+
+
+def test_utilization_tracks_running_nodes():
+    c = _cluster(8)
+    assert c.utilization() == 0.0
+    c.submit(FakeElasticJob(1), min_nodes=2, max_nodes=4)
+    assert c.utilization() == 0.5
