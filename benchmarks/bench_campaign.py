@@ -1,0 +1,98 @@
+"""Campaign throughput + determinism bench (--only campaign).
+
+Runs the checked-in mini campaign (examples/campaigns/mini.toml —
+fixture traces only, fully offline) twice into scratch directories and
+reports:
+
+  * ``cells_per_s`` — grid cells completed per second (serial, so the
+    number is machine-comparable rather than core-count-comparable);
+  * ``peak_rss_mb`` — in-process VmRSS high-water while the campaign
+    streams (the cells run the bounded-memory Scenario path; this
+    documents the bound at campaign scale);
+  * ``deterministic`` — the acceptance gate: both runs' rows.json /
+    report.json / report.md must be byte-identical.  The digest of the
+    artifact set is reported so regressions name the differing bytes.
+
+VALIDATION-FAIL (non-zero exit via benchmarks.run) on determinism or
+spec-validation errors.
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+import shutil
+import tempfile
+import threading
+import time
+from typing import List
+
+SPEC_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "examples", "campaigns", "mini.toml")
+
+ARTIFACTS = ("rows.json", "report.json", "report.md")
+
+
+def _rss_mb() -> float:
+    try:
+        with open("/proc/self/statm") as f:
+            page_mb = os.sysconf("SC_PAGE_SIZE") / 1048576.0
+            return int(f.read().split()[1]) * page_mb
+    except OSError:  # non-procfs platform: resource fallback
+        import resource
+        return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+
+def _artifact_digest(out_dir: str) -> str:
+    h = hashlib.sha256()
+    for name in ARTIFACTS:
+        with open(os.path.join(out_dir, name), "rb") as f:
+            h.update(name.encode())
+            h.update(f.read())
+    return h.hexdigest()
+
+
+def bench_campaign(spec_path: str = SPEC_PATH) -> List[dict]:
+    """Two serial offline runs of the mini campaign; see module doc."""
+    from repro.campaign import CampaignSpec, run_campaign
+
+    spec = CampaignSpec.load(spec_path)  # spec-validation gate
+    peak = [0.0]
+    stop = threading.Event()
+
+    def sampler():
+        while not stop.is_set():
+            peak[0] = max(peak[0], _rss_mb())
+            stop.wait(0.02)
+
+    digests = []
+    seconds = []
+    tmp = tempfile.mkdtemp(prefix="bench_campaign_")
+    try:
+        threading.Thread(target=sampler, daemon=True).start()
+        for k in range(2):
+            out = os.path.join(tmp, f"run{k}")
+            t0 = time.perf_counter()
+            run_campaign(spec, out_dir=out, offline=True, processes=0)
+            seconds.append(time.perf_counter() - t0)
+            digests.append(_artifact_digest(out))
+        stop.set()
+        peak[0] = max(peak[0], _rss_mb())
+    finally:
+        stop.set()
+        shutil.rmtree(tmp, ignore_errors=True)
+    deterministic = digests[0] == digests[1]
+    return [{
+        "name": "campaign_mini",
+        "spec": os.path.relpath(spec_path),
+        "n_cells": spec.n_cells,
+        "seconds": round(seconds[0], 3),
+        "seconds_second_run": round(seconds[1], 3),
+        "cells_per_s": round(spec.n_cells / seconds[0], 2),
+        "peak_rss_mb": round(peak[0], 1),
+        "artifact_sha256": digests[0][:16],
+        "deterministic": deterministic,
+        "derived": (f"cells={spec.n_cells},"
+                    f"cells_per_s={spec.n_cells / seconds[0]:.1f},"
+                    f"peak_rss_mb={peak[0]:.0f},"
+                    f"deterministic={deterministic}"),
+    }]

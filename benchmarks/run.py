@@ -18,6 +18,9 @@ writes the full row dicts to results/bench/*.json.  Sections:
   service     shadow scheduler service replay:      (results/bench/
               fidelity digest vs offline simulator   service.json;
               + decision-latency SLO gates           docs/service.md)
+  campaign    mini trace-zoo campaign run twice:    (results/bench/
+              cells/sec + peak RSS + byte-identical  campaign.json;
+              artifact gate                          docs/campaigns.md)
   roofline    per (arch x shape) roofline terms     (EXPERIMENTS §Roofline)
 
 Scale tiers: --quick runs (600, 2k) with the paired pre-PR baseline at
@@ -37,8 +40,8 @@ import subprocess
 import sys
 import time
 
-from . import (bench_decision, bench_roofline, bench_scale, bench_scheduler,
-               bench_service)
+from . import (bench_campaign, bench_decision, bench_roofline, bench_scale,
+               bench_scheduler, bench_service)
 
 OUT = "results/bench"
 
@@ -233,6 +236,28 @@ def main(argv=None) -> int:
                 fail = (f"service: {r['name']} decision p99 "
                         f"{r['decision_p99_ms']}ms > "
                         f"{r['decision_bound_ms']}ms bound")
+                print(f"VALIDATION-FAIL,{fail}", file=sys.stderr)
+                failures.append(fail)
+    if want("campaign"):
+        t0 = time.perf_counter()
+        try:
+            rows = bench_campaign.bench_campaign()
+        except ValueError as e:  # CampaignSpecError / zoo integrity
+            fail = f"campaign: spec/zoo validation failed: {e}"
+            print(f"VALIDATION-FAIL,{fail}", file=sys.stderr)
+            failures.append(fail)
+            rows = []
+        if rows:
+            # the mini campaign runs at fixed fixture scale; seeds and
+            # job counts come from the spec, not --quick/--full
+            _emit("campaign", rows, t0,
+                  dict(prov, seeds="per-spec", n_jobs="per-spec",
+                       note="spec-defined scale; see each row"))
+        for r in rows:
+            if not r["deterministic"]:
+                fail = (f"campaign: {r['name']} artifacts differ between "
+                        "two identical runs (rows/report must be "
+                        "byte-deterministic)")
                 print(f"VALIDATION-FAIL,{fail}", file=sys.stderr)
                 failures.append(fail)
     if want("roofline"):

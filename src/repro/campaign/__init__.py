@@ -1,0 +1,34 @@
+"""Cross-trace robustness campaigns (docs/campaigns.md).
+
+The subsystem that answers "which mechanism wins under which regime"
+over *real* traces, end to end and offline-first:
+
+  * :mod:`repro.campaign.zoo` — named traces with provenance (checked-in
+    fixtures + Parallel Workloads Archive entries), sha256-verified,
+    cached locally;
+  * :mod:`repro.campaign.calibrate` — per-trace knobs (target offered
+    load, type fractions, notice mix) expressed through the existing
+    registered sources/transforms so every cell replays through the
+    unchanged streaming Scenario path;
+  * :mod:`repro.campaign.spec` — declarative TOML/JSON campaign specs
+    that validate up front and expand into an
+    ``Experiment(stream=True)`` grid with checkpoint/resume;
+  * :mod:`repro.campaign.report` — per-regime winner tables with
+    bootstrap CIs, rendered byte-deterministically as markdown + JSON;
+  * ``python -m repro.campaign`` — the ``list`` / ``fetch`` / ``run`` /
+    ``report`` CLI.
+"""
+from .calibrate import TraceProfile, calibrated_scenario, profile_trace
+from .report import aggregate, winners, write_report
+from .runner import run_campaign
+from .spec import CampaignSpec, CampaignSpecError, default_output_dir
+from .zoo import (TraceSpec, fetch, file_sha256, get_trace, is_cached,
+                  register_trace, registered_traces, trace_path)
+
+__all__ = [
+    "CampaignSpec", "CampaignSpecError", "TraceProfile", "TraceSpec",
+    "aggregate", "calibrated_scenario", "default_output_dir", "fetch",
+    "file_sha256", "get_trace", "is_cached", "profile_trace",
+    "register_trace", "registered_traces", "run_campaign", "trace_path",
+    "winners", "write_report",
+]

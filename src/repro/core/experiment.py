@@ -269,6 +269,11 @@ class Experiment:
         parts = [repr(s) for s in specs]
         return hashlib.sha256("\n".join(parts).encode()).hexdigest()[:16]
 
+    def grid_key(self) -> str:
+        """Public fingerprint of this sweep's validated grid (the value
+        ``run_stream(checkpoint=...)`` stores in progress files)."""
+        return self._grid_key(self._validated_specs())
+
     def run_stream(self, checkpoint: Optional[str] = None
                    ) -> Iterator[RunResult]:
         """Yield each RunResult as it completes (streaming aggregation:

@@ -36,6 +36,10 @@ class Metrics:
     n_completed: int
     n_jobs: int
     decision_p99_ms: Optional[float] = None
+    # Mean bounded slowdown (BSLD, Feitelson): max(1, turnaround /
+    # max(t_actual, 10s)).  Keyword-defaulted so checkpoints and golden
+    # rows written before the field existed still round-trip.
+    avg_bounded_slowdown: Optional[float] = None
 
     def as_dict(self) -> Dict[str, float]:
         return {k: v for k, v in self.__dict__.items() if v is not None}
@@ -44,6 +48,12 @@ class Metrics:
 def _avg_turnaround(recs: List[JobRecord]) -> float:
     ts = [r.turnaround for r in recs if r.turnaround is not None]
     return float(np.mean(ts)) / 3600.0 if ts else float("nan")
+
+
+def bounded_slowdown(turnaround: float, t_actual: float,
+                     tau: float = 10.0) -> float:
+    """BSLD for one job: max(1, turnaround / max(t_actual, tau))."""
+    return max(1.0, turnaround / max(t_actual, tau))
 
 
 def summarize_records(records: Mapping[int, JobRecord],
@@ -193,6 +203,7 @@ class StreamingMetrics:
         self.instant_eps = instant_eps
         self.turn = {t: Welford() for t in JobType}
         self.turn_all = Welford()
+        self.bsld = Welford()
         self.seen = {t: 0 for t in JobType}
         self.completed = 0
         self.od_instant = 0
@@ -216,6 +227,7 @@ class StreamingMetrics:
         if t is not None:
             self.turn[job.jtype].add(t)
             self.turn_all.add(t)
+            self.bsld.add(bounded_slowdown(t, job.t_actual))
             for q in self.turn_q.values():
                 q.add(t)
         if rec.first_start is not None:
@@ -268,6 +280,7 @@ class StreamingMetrics:
             n_completed=self.completed,
             n_jobs=n,
             decision_p99_ms=dec,
+            avg_bounded_slowdown=self.bsld.result(),
         )
 
     def summary(self) -> dict:
@@ -325,4 +338,8 @@ def collect(sim: Simulator) -> Metrics:
         n_completed=sum(r.completion is not None for r in recs),
         n_jobs=len(recs),
         decision_p99_ms=dec,
+        avg_bounded_slowdown=(
+            float(np.mean([bounded_slowdown(r.turnaround, r.job.t_actual)
+                           for r in recs if r.turnaround is not None]))
+            if any(r.turnaround is not None for r in recs) else float("nan")),
     )

@@ -82,6 +82,47 @@ class TraceStats:
     n_od: int
     t0: float
     t1: float
+    #: on-demand job counts per stream-merge rank: rank 0 is the base
+    #: trace, rank r >= 1 the jobs a trace-restructuring transform (the
+    #: r-th ``burst_inject`` in the stack) merged in.  The *materialized*
+    #: pipeline orders od jobs base-first-then-appended when a later
+    #: transform assigns per-od draws (NoticeModel.assign walks the list
+    #: in that order); a streaming merge interleaves them by submit time,
+    #: so downstream per-od transforms recover the materialized
+    #: assignment order from each job's rank (:func:`stream_rank`) plus
+    #: these per-rank offsets.  Empty means "all rank 0" (n_od jobs).
+    od_rank_counts: Tuple[int, ...] = ()
+
+    def od_rank_offsets(self) -> Tuple[int, ...]:
+        """Start index of each rank's od block in materialized order."""
+        counts = self.od_rank_counts or (self.n_od,)
+        offsets = [0]
+        for c in counts[:-1]:
+            offsets.append(offsets[-1] + c)
+        return tuple(offsets)
+
+
+#: attribute a stream-merging transform sets on the JobSpecs it injects
+#: (absent == rank 0, the base trace): a ``(rank, index)`` pair, where
+#: index is the job's position within its rank in *materialized*
+#: (generation/appended) order — the merge re-orders injected jobs by
+#: submit time, so encounter order no longer carries it.  See
+#: TraceStats.od_rank_counts.
+_STREAM_TAG_ATTR = "_stream_tag"
+
+
+def stream_rank(j: JobSpec) -> int:
+    """The stream-merge rank of a job (0 for base-trace jobs)."""
+    return getattr(j, _STREAM_TAG_ATTR, (0, 0))[0]
+
+
+def stream_index(j: JobSpec) -> int:
+    """A tagged job's position within its rank, in materialized order."""
+    return getattr(j, _STREAM_TAG_ATTR, (0, 0))[1]
+
+
+def tag_stream_rank(j: JobSpec, rank: int, index: int) -> None:
+    setattr(j, _STREAM_TAG_ATTR, (rank, index))
 
 
 class WorkloadSource:
@@ -156,11 +197,22 @@ class ScenarioTransform:
         the shared per-run stream is consumed in exactly the
         materialized order;
       * the returned iterator must preserve submit-time order (monotone
-        arrival maps) — order-restructuring rewrites (burst injection,
-        type reassignment) stay ``streamable = False`` and force
+        arrival maps).  A transform that *adds* jobs (``burst_inject``)
+        streams by drawing its bounded injected set eagerly and merging
+        it into the flow in submit order with base-first tie-breaks —
+        reproducing exactly what ``canonicalize``'s stable sort does to
+        the appended materialized list — and tags the injected jobs
+        with a stream rank (:func:`tag_stream_rank`) so downstream
+        per-od transforms can recover the materialized assignment
+        order (see :attr:`TraceStats.od_rank_counts`).  Rewrites that
+        reassign *existing* jobs' draws content-dependently
+        (``type_mix``) stay ``streamable = False`` and force
         ``iter_realize`` to fall back to the materialized path;
       * ``stream_stats`` republishes the stats the transform hands the
-        next stage (e.g. a compressed arrival span)."""
+        next stage (e.g. a compressed arrival span, or counts grown by
+        injected jobs).  ``iter_realize`` calls it *after* ``stream``,
+        so a merging transform may publish exact stats of the set it
+        just drew."""
 
     name: str = "?"
     streamable: bool = False
@@ -337,10 +389,12 @@ class Scenario:
         Job-for-job identical to ``realize`` (same draws from the same
         per-run stream, same canonical order) but lazy: the source
         yields jobs one at a time and streamable transforms rewrite
-        them in flight.  A stack containing a non-streamable transform
-        (``burst_inject``, ``type_mix`` — they restructure the trace)
-        falls back to materializing internally; the call still returns
-        an iterator, just not a bounded-memory one.
+        them in flight (``burst_inject`` merges its bounded injected
+        set in tagged submit order).  A stack containing a
+        non-streamable transform (``type_mix`` — it redraws existing
+        jobs' assignments content-dependently) falls back to
+        materializing internally; the call still returns an iterator,
+        just not a bounded-memory one.
         """
         if seed is None:
             seed = self.seed

@@ -23,7 +23,8 @@ from typing import Iterator, List, Optional
 import numpy as np
 
 from ..job import JobSpec, JobType, NoticeKind
-from .base import ScenarioTransform, TraceStats, register_transform
+from .base import ScenarioTransform, TraceStats, register_transform, \
+    stream_index, stream_rank, tag_stream_rank
 from .synthetic import NoticeModel, assign_project_types, notice_mix, \
     rigid_ckpt_params
 
@@ -97,7 +98,19 @@ class BurstInject(ScenarioTransform):
     draw sizes log-uniform in ``size`` — clipped to the half-system
     on-demand cap (paper §IV-A) — and runtimes log-uniform in
     ``runtime``; a ``mix`` (Table III name) gives them advance notice.
+
+    Streamable via a *tagged merge stage*: every draw depends only on
+    the span endpoints and system size, so ``stream`` draws the whole
+    injected set eagerly (bounded: at most ``n_bursts x burst_size[1]``
+    jobs), tags each injected job with the next stream rank, and merges
+    them into the flow in submit order with base-first tie-breaks —
+    bit-identical to what ``canonicalize``'s stable sort does to the
+    appended materialized list, while the base trace itself never
+    materializes.  ``stream_stats`` then republishes exact counts/span
+    of the drawn set (it runs after ``stream``, per the contract).
     """
+
+    streamable = True
 
     def __init__(self, n_bursts: int = 3, burst_size: tuple = (2, 8),
                  window: float = 1800.0, size: tuple = (64, 256),
@@ -116,13 +129,11 @@ class BurstInject(ScenarioTransform):
         self.notice_lead = notice_lead
         self.late_window = late_window
 
-    def apply(self, jobs: List[JobSpec], rng: np.random.Generator,
-              n_nodes: int) -> List[JobSpec]:
-        if not jobs:
-            return jobs
+    def _draw_injected(self, rng: np.random.Generator, n_nodes: int,
+                       t0: float, t1: float) -> List[JobSpec]:
+        """The single copy of the injection draw sequence, shared by the
+        materialized and streaming paths (same RNG consumption order)."""
         od_cap = max(1, n_nodes // 2)
-        t0 = min(j.submit_time for j in jobs)
-        t1 = max(j.submit_time for j in jobs)
         injected: List[JobSpec] = []
         for b in range(self.n_bursts):
             anchor = float(rng.uniform(t0, max(t0, t1 - self.window)))
@@ -143,8 +154,57 @@ class BurstInject(ScenarioTransform):
             NoticeModel().assign(rng, injected, notice_mix(self.mix),
                                  lead=self.notice_lead,
                                  late_window=self.late_window)
-        jobs.extend(injected)
+        return injected
+
+    def apply(self, jobs: List[JobSpec], rng: np.random.Generator,
+              n_nodes: int) -> List[JobSpec]:
+        if not jobs:
+            return jobs
+        t0 = min(j.submit_time for j in jobs)
+        t1 = max(j.submit_time for j in jobs)
+        jobs.extend(self._draw_injected(rng, n_nodes, t0, t1))
         return jobs
+
+    def stream(self, jobs: Iterator[JobSpec], rng: np.random.Generator,
+               n_nodes: int, stats: TraceStats) -> Iterator[JobSpec]:
+        self._injected: List[JobSpec] = []
+        if stats.n_jobs == 0:
+            return jobs
+        injected = self._draw_injected(rng, n_nodes, stats.t0, stats.t1)
+        # injected jobs sort AFTER every incoming job on submit-time ties
+        # (stable sort over the appended list); their rank lets
+        # downstream per-od transforms reconstruct that appended order
+        rank = len(stats.od_rank_counts or (stats.n_od,))
+        for i, j in enumerate(injected):
+            tag_stream_rank(j, rank, i)
+        self._injected = injected
+        merged = sorted(injected, key=lambda j: j.submit_time)
+
+        def gen():
+            it = iter(merged)
+            nxt = next(it, None)
+            for j in jobs:
+                while nxt is not None and nxt.submit_time < j.submit_time:
+                    yield nxt
+                    nxt = next(it, None)
+                yield j
+            while nxt is not None:
+                yield nxt
+                nxt = next(it, None)
+        return gen()
+
+    def stream_stats(self, stats: TraceStats) -> TraceStats:
+        injected = getattr(self, "_injected", [])
+        if not injected:
+            return stats
+        subs = [j.submit_time for j in injected]
+        counts = stats.od_rank_counts or (stats.n_od,)
+        return replace(stats,
+                       n_jobs=stats.n_jobs + len(injected),
+                       n_od=stats.n_od + len(injected),
+                       t0=min(stats.t0, min(subs)),
+                       t1=max(stats.t1, max(subs)),
+                       od_rank_counts=counts + (len(injected),))
 
 
 @register_transform("diurnal")
@@ -253,12 +313,24 @@ class NoticeMixOverride(ScenarioTransform):
         drawn = NoticeModel().draw(rng, stats.n_od, notice_mix(self.mix),
                                    lead=self.notice_lead,
                                    late_window=self.late_window)
+        # materialized assign order is base-od-then-injected (the
+        # appended list), while a merged stream interleaves by submit
+        # time: each od job's drawn tuple is indexed by its rank's
+        # offset plus its position within the rank.  Base (rank-0) jobs
+        # keep encounter order (monotone stages preserve it); injected
+        # jobs carry their materialized position in their stream tag.
+        offsets = stats.od_rank_offsets()
 
         def gen():
-            it = iter(drawn)
+            base_seen = 0
             for j in jobs:
                 if j.jtype is JobType.ONDEMAND:
-                    NoticeModel.apply_one(j, next(it))
+                    r = stream_rank(j)
+                    if r == 0:
+                        idx, base_seen = base_seen, base_seen + 1
+                    else:
+                        idx = stream_index(j)
+                    NoticeModel.apply_one(j, drawn[offsets[r] + idx])
                 yield j
         return gen()
 

@@ -1,0 +1,364 @@
+"""repro.campaign: trace zoo, calibration, specs, runner, reports.
+
+Everything here is offline: the zoo's checked-in gzipped fixtures are
+the only traces touched, and the one "remote" test asserts that
+offline mode refuses to download rather than trying to.
+"""
+import gzip
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.campaign import (CampaignSpec, CampaignSpecError, TraceSpec,
+                            calibrated_scenario, fetch, file_sha256,
+                            get_trace, profile_trace, register_trace,
+                            run_campaign)
+from repro.campaign import _toml, zoo
+from repro.campaign.report import aggregate, bootstrap_ci, winners
+from repro.campaign.spec import default_output_dir
+from repro.core.workloads.base import WorkloadDataError
+from repro.core.workloads.swf import iter_swf
+
+FIXTURES = ("mini-steady", "mini-bursty", "mini-heavy")
+
+#: the in-test campaign: 2 traces x 2 mechanisms x 2 seeds x 1 grid point
+SPEC_DICT = {
+    "campaign": {"name": "t", "mechanisms": ["BASE", "CUA&SPAA"],
+                 "seeds": [0, 1], "max_jobs": 120},
+    "grid": {"target_load": [0.8], "notice": ["W2"]},
+    "trace": [{"name": "mini-steady"}, {"name": "mini-bursty"}],
+}
+
+
+# ------------------------------------------------------------------ trace zoo
+def test_zoo_fixtures_resolve_and_verify():
+    for name in FIXTURES:
+        path = fetch(name)
+        assert os.path.exists(path)
+        assert path.endswith(".swf.gz")
+        assert file_sha256(path) == get_trace(name).sha256
+
+
+def test_zoo_unknown_trace_lists_registry():
+    with pytest.raises(WorkloadDataError, match="mini-steady"):
+        get_trace("no-such-trace")
+
+
+def test_zoo_sha_mismatch_refused():
+    register_trace(TraceSpec(
+        name="tampered-test", description="x", license="x",
+        sha256="0" * 64, fixture="mini-steady.swf.gz"))
+    try:
+        with pytest.raises(WorkloadDataError, match="sha256 mismatch"):
+            fetch("tampered-test")
+    finally:
+        del zoo._ZOO["tampered-test"]
+
+
+def test_zoo_offline_refuses_download(tmp_path, monkeypatch):
+    monkeypatch.setenv(zoo.CACHE_ENV, str(tmp_path / "cache"))
+    assert get_trace("kth-sp2").remote
+    with pytest.raises(WorkloadDataError, match="offline"):
+        fetch("kth-sp2", offline=True)
+
+
+def test_zoo_reregistration_conflict():
+    spec = get_trace("mini-steady")
+    register_trace(spec)  # identical: idempotent
+    with pytest.raises(ValueError, match="already registered"):
+        register_trace(TraceSpec(
+            name="mini-steady", description="different", license="x"))
+
+
+# ----------------------------------------------------- gzip SWF reader (swf.py)
+def test_gzip_reads_identical_to_plain(tmp_path):
+    gz_path = fetch("mini-steady")
+    plain = tmp_path / "plain.swf"
+    with gzip.open(gz_path, "rb") as f:
+        plain.write_bytes(f.read())
+    hdr_gz, hdr_plain = {}, {}
+    recs_gz = list(iter_swf(gz_path, header=hdr_gz))
+    recs_plain = list(iter_swf(str(plain), header=hdr_plain))
+    assert recs_gz == recs_plain
+    assert hdr_gz == hdr_plain
+    assert hdr_gz["MaxNodes"] == "64"
+
+
+def test_truncated_gzip_is_data_error(tmp_path):
+    blob = open(fetch("mini-steady"), "rb").read()
+    bad = tmp_path / "trunc.swf.gz"
+    bad.write_bytes(blob[:len(blob) // 2])
+    with pytest.raises(WorkloadDataError, match="corrupt gzip"):
+        list(iter_swf(str(bad)))
+
+
+def test_binary_junk_is_data_error(tmp_path):
+    bad = tmp_path / "junk.swf"
+    bad.write_bytes(b"\xfe\xfe\xff\x00" * 64)
+    with pytest.raises(WorkloadDataError, match="not a text SWF"):
+        list(iter_swf(str(bad)))
+
+
+def test_missing_fields_padded_with_unknown_marker(tmp_path):
+    short = tmp_path / "short.swf"
+    short.write_text("; MaxNodes: 8\n1 0 -1 60 4\n")
+    (rec,) = list(iter_swf(str(short)))
+    assert rec["allocated_procs"] == 4
+    assert rec["think_time"] == -1.0  # padded
+
+
+# ---------------------------------------------------------------- TOML subset
+def test_toml_subset_roundtrip():
+    data = _toml.loads("""
+# comment
+[campaign]
+name = "x"           # trailing comment
+seeds = [0, 1,
+         2]
+scale = 1.5
+flag = true
+[campaign.sim]
+queue_policy = "EASY"
+[[trace]]
+name = "a"
+[[trace]]
+name = "b"
+target_load = [0.7]
+""")
+    assert data["campaign"]["name"] == "x"
+    assert data["campaign"]["seeds"] == [0, 1, 2]
+    assert data["campaign"]["scale"] == 1.5
+    assert data["campaign"]["flag"] is True
+    assert data["campaign"]["sim"]["queue_policy"] == "EASY"
+    assert [t["name"] for t in data["trace"]] == ["a", "b"]
+    assert data["trace"][1]["target_load"] == [0.7]
+
+
+@pytest.mark.parametrize("bad, err", [
+    ('x = "unterminated', "unterminated string"),
+    ("just a line", "expected 'key = value'"),
+    ("x = 2026-01-01", "unsupported value"),
+    ("[t]\nx = 1\nx = 2", "duplicate key"),
+    ('x = "a" "b"', "trailing garbage"),
+])
+def test_toml_subset_errors(bad, err):
+    with pytest.raises(_toml.TomlError, match=err):
+        _toml.loads(bad)
+
+
+# ---------------------------------------------------------------- calibration
+def test_profile_matches_fixture_generation():
+    p = profile_trace("mini-steady")
+    assert p.n_jobs == 340
+    assert p.n_nodes == 64
+    assert 0.7 < p.offered_load < 0.85
+    heavy = profile_trace("mini-heavy")
+    assert heavy.offered_load > 1.0
+
+
+def test_load_factor_math():
+    p = profile_trace("mini-steady")
+    assert p.load_factor(p.offered_load) == pytest.approx(1.0)
+    assert p.load_factor(2 * p.offered_load) == pytest.approx(2.0)
+    with pytest.raises(ValueError):
+        p.load_factor(0.0)
+
+
+def test_calibrated_scenario_hits_target_load():
+    target = 1.1
+    sc = calibrated_scenario("mini-steady", target_load=target,
+                             notice="W2")
+    assert sc.streamable  # the whole point: streaming path, no fallback
+    jobs, n_nodes = sc.realize(seed=0)
+    span = jobs[-1].submit_time - jobs[0].submit_time
+    load = sum(j.size * j.t_actual for j in jobs) / (n_nodes * span)
+    assert load == pytest.approx(target, rel=0.01)
+
+
+def test_calibrated_scenario_type_fractions_streamable():
+    sc = calibrated_scenario("mini-bursty", malleable_frac=0.5,
+                             od_frac=0.2)
+    assert sc.streamable
+    assert sc.params["frac_od_projects"] == pytest.approx(0.2)
+    assert sc.params["frac_rigid_projects"] == pytest.approx(0.3)
+
+
+def test_calibrated_scenario_invalid_fractions():
+    with pytest.raises(ValueError, match="sum <= 1"):
+        calibrated_scenario("mini-steady", malleable_frac=0.9,
+                            od_frac=0.3)
+
+
+# ------------------------------------------------------------ spec validation
+def _spec(**over):
+    import copy
+    d = copy.deepcopy(SPEC_DICT)
+    for dotted, v in over.items():
+        cur = d
+        *parents, leaf = dotted.split(".")
+        for p in parents:
+            cur = cur[p]
+        if v is None:
+            cur.pop(leaf, None)
+        else:
+            cur[leaf] = v
+    return d
+
+
+def test_spec_loads_and_counts_cells():
+    spec = CampaignSpec.from_dict(SPEC_DICT)
+    assert spec.n_cells == 2 * 2 * 2  # traces x mechanisms x seeds
+    assert default_output_dir(spec).endswith(os.path.join("campaigns", "t"))
+
+
+@pytest.mark.parametrize("over, err", [
+    ({"campaign": None}, "missing .campaign."),
+    ({"campaign.mechanisms": ["NOPE&X"]}, "mechanism"),
+    ({"campaign.mechanisms": []}, "non-empty"),
+    ({"campaign.seeds": [0, 0]}, "duplicate seeds"),
+    ({"campaign.name": "a b"}, "without spaces"),
+    ({"campaign.typo_key": 1}, "unknown key"),
+    ({"grid.notice": ["W9"]}, "unknown notice mix"),
+    ({"grid.target_load": [3.0]}, "outside"),
+    ({"grid.target_load": []}, "non-empty list"),
+    ({"grid.bogus_axis": [1]}, "unknown axis"),
+    ({"trace": [{"name": "no-such-trace"}]}, "unknown trace"),
+    ({"trace": []}, "at least one"),
+    ({"grid.od_frac": [0.9], "grid.malleable_frac": [0.9]}, "rigid"),
+])
+def test_spec_validation_errors(over, err):
+    with pytest.raises(CampaignSpecError, match=err):
+        CampaignSpec.from_dict(_spec(**over))
+
+
+def test_spec_toml_file_loads(tmp_path):
+    spec = CampaignSpec.load(os.path.join("examples", "campaigns",
+                                          "mini.toml"))
+    assert spec.name == "mini"
+    assert spec.n_cells == 16
+    # every expanded cell replays through the streaming path
+    for _regime, sc in spec.cells():
+        assert sc.streamable
+
+
+def test_spec_per_trace_axis_override():
+    spec = CampaignSpec.from_dict(_spec(**{
+        "trace": [{"name": "mini-steady", "target_load": [0.6, 0.9, 1.2]},
+                  {"name": "mini-bursty"}]}))
+    # 3 points for steady, 1 (grid) for bursty, x 2 mech x 2 seeds
+    assert spec.n_cells == (3 + 1) * 2 * 2
+
+
+# ------------------------------------------------------------------- reports
+def _rows():
+    rows = []
+    for trace in ("a", "b"):
+        for mech, od in (("BASE", 2.0), ("CUA&SPAA", 1.0)):
+            for seed in range(3):
+                rows.append({
+                    "regime": {"trace": trace, "target_load": 0.8},
+                    "mechanism": mech, "seed": seed,
+                    "metrics": {"avg_turnaround_od_h": od + 0.01 * seed,
+                                "avg_bounded_slowdown": od,
+                                "system_utilization": 0.5}})
+    return rows
+
+
+def test_report_winners_and_determinism():
+    agg1, agg2 = aggregate(_rows()), aggregate(list(reversed(_rows())))
+    assert agg1 == agg2  # row order must not matter
+    won = winners(agg1)
+    assert len(won) == 2
+    for row in won:
+        w = row["winners"]["avg_turnaround_od_h"]
+        assert w["mechanism"] == "CUA&SPAA"
+        assert w["decisive"]  # CIs are far apart
+        # exact utilization tie: name order breaks it deterministically
+        assert row["winners"]["system_utilization"]["mechanism"] == "BASE"
+        assert not row["winners"]["system_utilization"]["decisive"]
+
+
+def test_bootstrap_ci_is_seeded_by_key():
+    lo1, hi1 = bootstrap_ci([1.0, 2.0, 3.0], key="k")
+    lo2, hi2 = bootstrap_ci([1.0, 2.0, 3.0], key="k")
+    assert (lo1, hi1) == (lo2, hi2)
+    assert bootstrap_ci([5.0], key="k") == (5.0, 5.0)
+    nan_lo, nan_hi = bootstrap_ci([], key="k")
+    assert np.isnan(nan_lo) and np.isnan(nan_hi)
+
+
+# ------------------------------------------------------- end-to-end campaigns
+def test_campaign_end_to_end_deterministic(tmp_path):
+    spec = CampaignSpec.from_dict(SPEC_DICT)
+    out1, out2 = tmp_path / "run1", tmp_path / "run2"
+    paths1 = run_campaign(spec, out_dir=str(out1), processes=0)
+    paths2 = run_campaign(spec, out_dir=str(out2), processes=0)
+    for key in ("rows", "report_json", "report_md"):
+        b1 = open(paths1[key], "rb").read()
+        b2 = open(paths2[key], "rb").read()
+        assert b1 == b2, f"{key} not byte-identical across runs"
+    payload = json.load(open(paths1["rows"]))
+    assert len(payload["rows"]) == spec.n_cells
+    traces = {r["regime"]["trace"] for r in payload["rows"]}
+    assert traces == {"mini-steady", "mini-bursty"}
+    # metrics carry the new BSLD field
+    assert all(r["metrics"]["avg_bounded_slowdown"] >= 1.0
+               for r in payload["rows"])
+
+
+def test_campaign_checkpoint_resume_matches_uninterrupted(tmp_path):
+    """Satellite: kill a multi-trace campaign mid-grid, resume, and the
+    completed-cell set + aggregated artifacts match the uninterrupted
+    run byte for byte."""
+    spec = CampaignSpec.from_dict(SPEC_DICT)
+    baseline = run_campaign(spec, out_dir=str(tmp_path / "full"),
+                            processes=0)
+
+    out = tmp_path / "killed"
+    out.mkdir()
+    exp, _regimes = spec.to_experiment(processes=0)
+    ckpt = str(out / "checkpoint.json")
+    killed_after = 3
+    for i, _result in enumerate(exp.run_stream(checkpoint=ckpt), 1):
+        if i == killed_after:
+            break  # simulated kill mid-grid (two traces still pending)
+    saved = json.load(open(ckpt))
+    assert len(saved["runs"]) == killed_after
+    assert saved["grid_key"] == exp.grid_key()
+
+    executed = []
+    run_campaign(spec, out_dir=str(out), processes=0,
+                 progress=lambda d, t, r: executed.append(
+                     (r.spec.workload.label, r.spec.mechanism,
+                      r.spec.seed, r.elapsed_s)))
+    # the first killed_after cells were restored (elapsed saved from the
+    # first attempt), and every cell is accounted for exactly once
+    assert len(executed) == spec.n_cells
+    assert len({e[:3] for e in executed}) == spec.n_cells
+    for key in ("rows", "report_json", "report_md"):
+        b_full = open(baseline[key], "rb").read()
+        b_resumed = open(os.path.join(
+            str(out), os.path.basename(baseline[key])), "rb").read()
+        assert b_full == b_resumed
+
+
+def test_campaign_checkpoint_refuses_foreign_grid(tmp_path):
+    spec = CampaignSpec.from_dict(SPEC_DICT)
+    other = CampaignSpec.from_dict(_spec(**{"campaign.seeds": [7]}))
+    out = tmp_path / "c"
+    run_campaign(spec, out_dir=str(out), processes=0)
+    with pytest.raises(ValueError, match="different"):
+        run_campaign(other, out_dir=str(out), processes=0)
+
+
+def test_campaign_fresh_discards_checkpoint(tmp_path):
+    spec = CampaignSpec.from_dict(SPEC_DICT)
+    other = CampaignSpec.from_dict(_spec(**{"campaign.seeds": [7]}))
+    out = tmp_path / "c"
+    run_campaign(spec, out_dir=str(out), processes=0)
+    # resume=False: the stale grid's checkpoint is discarded, not refused
+    run_campaign(other, out_dir=str(out), processes=0, resume=False)
+    payload = json.load(open(out / "rows.json"))
+    assert {r["seed"] for r in payload["rows"]} == {7}

@@ -70,7 +70,16 @@ STACKS = [
      ("diurnal", {"amplitude": 0.5}),
      ("notice_mix", {"mix": "W2"})),                         # fully streaming
     (("burst_inject", {"n_bursts": 2, "mix": "W1"}),
-     ("notice_mix", {"mix": "W5"})),                         # fallback path
+     ("notice_mix", {"mix": "W5"})),                         # tagged merge
+    (("load_scale", {"factor": 0.8}),
+     ("burst_inject", {"n_bursts": 3}),
+     ("diurnal", {"amplitude": 0.4}),
+     ("notice_mix", {"mix": "W3"})),       # merge sandwiched by warps
+    (("burst_inject", {"n_bursts": 2, "mix": "W2"}),
+     ("burst_inject", {"n_bursts": 1, "burst_size": (3, 5)}),
+     ("notice_mix", {"mix": "W4"})),       # stacked merges (multi-rank)
+    (("type_mix", {"frac_od": 0.3, "frac_rigid": 0.3}),
+     ("burst_inject", {"n_bursts": 2})),                     # fallback path
 ]
 
 
@@ -106,8 +115,8 @@ def test_streamable_classification():
     assert Scenario("theta", transforms=(("load_scale", {"factor": 2.0}),
                                          ("diurnal", {}),
                                          ("notice_mix", {}))).streamable
-    assert not Scenario("theta",
-                        transforms=(("burst_inject", {}),)).streamable
+    assert Scenario("theta",
+                    transforms=(("burst_inject", {}),)).streamable
     assert not Scenario("theta", transforms=(("type_mix", {}),)).streamable
 
 
