@@ -1,0 +1,125 @@
+"""Fault-tolerance benchmark + CI chaos gate.
+
+Two row families, both hard gates in benchmarks/run.py:
+
+* **kill/recover** — run the shadow service partway, abandon it
+  mid-flight with a torn byte-tail on the decision log (what a SIGKILL
+  leaves behind), recover from the rotated on-disk segments, finish,
+  and require the concatenated decision stream's sha256 to equal an
+  uninterrupted run's (`digest_match`).  Swept across mechanisms.
+* **MTBF sweep** — simulate a fault-injected scenario cell twice per
+  MTBF point and require job-for-job identical records
+  (`deterministic`, via records_sha256); rows also carry goodput,
+  lost work, and on-demand turnaround so the artifact shows how the
+  hybrid mechanisms degrade as the machine gets flakier.
+
+Rows land in results/bench/faults.json (the chaos-smoke CI artifact).
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+from typing import List, Sequence
+
+from repro.core import SimConfig, Simulator
+from repro.core.metrics import collect, records_sha256
+from repro.core.workloads import get_scenario
+from repro.service import (SchedulerService, ServiceConfig, decision_digest,
+                           read_decision_log)
+
+MECHANISMS: Sequence[str] = ("CUA&SPAA", "CUP&STEAL")
+#: node MTBF points swept (hours); mttr and horizon fixed per sweep
+MTBF_SWEEP_H: Sequence[float] = (40.0, 160.0, 720.0)
+
+
+def bench_kill_recover(n_jobs: int = 150, seed: int = 3,
+                       kill_after: int = 25,
+                       mechanisms: Sequence[str] = MECHANISMS) -> List[dict]:
+    """Crash-recovery digest gate: partial run + torn tail -> recover ->
+    finish == uninterrupted, per mechanism."""
+    rows = []
+    jobs, n_nodes = get_scenario("bursty-od", n_jobs=n_jobs).realize(seed)
+    for mech in mechanisms:
+        t0 = time.perf_counter()
+        ref = SchedulerService(
+            ServiceConfig(n_nodes=n_nodes, mechanism=mech), list(jobs))
+        ref_digest = ref.run_replay().digest
+
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, "decisions.jsonl")
+            cfg = ServiceConfig(n_nodes=n_nodes, mechanism=mech,
+                                decision_log_path=path,
+                                log_rotate_bytes=2048)
+            crashed = SchedulerService(cfg, list(jobs))
+            while crashed.core.n_decisions < kill_after:
+                t = crashed.core.next_event_time()
+                if t is None:
+                    break
+                crashed._step_batch(t)
+            # simulate the SIGKILL aftermath: no close, half-written row
+            with open(path, "a") as fh:
+                fh.write('{"seq": -999, "event": "to')
+
+            import warnings
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore")   # torn-tail warning is the point
+                svc, rec_report = SchedulerService.recover(cfg, list(jobs))
+            rep = svc.run_replay()
+            disk_digest = decision_digest(read_decision_log(path))
+
+        ok = (rec_report.ok and rep.digest == ref_digest
+              and disk_digest == ref_digest)
+        rows.append({
+            "name": f"faults_recover_{mech.replace('&', '_')}",
+            "mechanism": mech, "n_jobs": len(jobs), "n_nodes": n_nodes,
+            "kill_after": kill_after,
+            "n_recovered": rec_report.n_decisions_recovered,
+            "prefix_match": rec_report.digests_match,
+            "digest_match": ok,
+            "digest": rep.digest,
+            "seconds": round(time.perf_counter() - t0, 4),
+        })
+    return rows
+
+
+def bench_mtbf_sweep(n_jobs: int = 150, seed: int = 2,
+                     mechanism: str = "CUA&SPAA",
+                     mtbf_sweep_h: Sequence[float] = MTBF_SWEEP_H,
+                     mttr_h: float = 2.0,
+                     horizon_days: float = 5.0) -> List[dict]:
+    """Determinism + degradation rows across node MTBF."""
+    rows = []
+    jobs, n_nodes = get_scenario("bursty-od", n_jobs=n_jobs).realize(seed)
+    for mtbf_h in mtbf_sweep_h:
+        spec = (f"exp-mtbf:mtbf_h={mtbf_h},mttr_h={mttr_h},"
+                f"horizon_days={horizon_days}")
+        cfg = SimConfig(n_nodes=n_nodes, mechanism=mechanism, faults=spec)
+        t0 = time.perf_counter()
+        sim = Simulator(cfg, list(jobs))
+        recs = sim.run()
+        wall = time.perf_counter() - t0
+        sha1 = records_sha256(recs)
+        sha2 = records_sha256(Simulator(cfg, list(jobs)).run())
+        m = collect(sim)
+        rows.append({
+            "name": f"faults_mtbf_{mtbf_h:g}h",
+            "mechanism": mechanism, "fault_spec": spec,
+            "n_jobs": len(jobs), "n_nodes": n_nodes,
+            "deterministic": sha1 == sha2,
+            "records_sha256": sha1,
+            "n_node_failures": m.n_node_failures,
+            "n_interruptions": m.n_interruptions,
+            "lost_work_node_h": round(m.lost_work_node_h, 3),
+            "goodput": round(m.goodput, 4),
+            "od_turnaround_h": round(m.avg_turnaround_od_h, 4),
+            "seconds": round(wall, 4),
+        })
+    return rows
+
+
+def bench_faults(n_jobs: int = 150, quick: bool = False) -> List[dict]:
+    mechs = MECHANISMS[:1] if quick else MECHANISMS
+    sweep = MTBF_SWEEP_H[:2] if quick else MTBF_SWEEP_H
+    return (bench_kill_recover(n_jobs=n_jobs, mechanisms=mechs)
+            + bench_mtbf_sweep(n_jobs=n_jobs, mtbf_sweep_h=sweep))

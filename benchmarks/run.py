@@ -18,6 +18,9 @@ writes the full row dicts to results/bench/*.json.  Sections:
   service     shadow scheduler service replay:      (results/bench/
               fidelity digest vs offline simulator   service.json;
               + decision-latency SLO gates           docs/service.md)
+  faults      chaos gate: SIGKILL-style crash ->    (results/bench/
+              recover -> digest == uninterrupted,    faults.json;
+              + MTBF-sweep determinism + goodput     docs/faults.md)
   campaign    mini trace-zoo campaign run twice:    (results/bench/
               cells/sec + peak RSS + byte-identical  campaign.json;
               artifact gate                          docs/campaigns.md)
@@ -40,8 +43,8 @@ import subprocess
 import sys
 import time
 
-from . import (bench_campaign, bench_decision, bench_roofline, bench_scale,
-               bench_scheduler, bench_service)
+from . import (bench_campaign, bench_decision, bench_faults, bench_roofline,
+               bench_scale, bench_scheduler, bench_service)
 
 OUT = "results/bench"
 
@@ -236,6 +239,25 @@ def main(argv=None) -> int:
                 fail = (f"service: {r['name']} decision p99 "
                         f"{r['decision_p99_ms']}ms > "
                         f"{r['decision_bound_ms']}ms bound")
+                print(f"VALIDATION-FAIL,{fail}", file=sys.stderr)
+                failures.append(fail)
+    if want("faults"):
+        t0 = time.perf_counter()
+        rows = bench_faults.bench_faults(
+            n_jobs=100 if args.quick else 150, quick=args.quick)
+        _emit("faults", rows, t0,
+              dict(prov, seeds=[2, 3],
+                   n_jobs=100 if args.quick else 150,
+                   note="recover rows use seed 3, mtbf rows seed 2"))
+        for r in rows:
+            if r.get("digest_match") is False:
+                fail = (f"faults: {r['name']} recovered decision stream "
+                        "diverges from the uninterrupted run")
+                print(f"VALIDATION-FAIL,{fail}", file=sys.stderr)
+                failures.append(fail)
+            if r.get("deterministic") is False:
+                fail = (f"faults: {r['name']} fault-injected cell is not "
+                        "job-for-job reproducible")
                 print(f"VALIDATION-FAIL,{fail}", file=sys.stderr)
                 failures.append(fail)
     if want("campaign"):

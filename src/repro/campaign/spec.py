@@ -34,7 +34,7 @@ from __future__ import annotations
 import itertools
 import json
 import os
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Dict, List, Mapping, Optional, Tuple
 
 from repro.core.experiment import Experiment
@@ -47,8 +47,10 @@ from .calibrate import calibrated_scenario
 from .zoo import get_trace
 
 #: the regime axes a [grid] (or [[trace]]) table may sweep, with their
-#: validators (value -> error string or None)
-GRID_AXES = ("target_load", "malleable_frac", "od_frac", "notice")
+#: validators (value -> error string or None).  ``faults`` values are
+#: compact repro.faults spec strings ("none", "exp-mtbf:mtbf_h=168");
+#: they thread into Scenario.faults -> SimConfig.faults per cell.
+GRID_AXES = ("target_load", "malleable_frac", "od_frac", "notice", "faults")
 
 
 class CampaignSpecError(ValueError):
@@ -242,6 +244,13 @@ class CampaignSpec:
                     notice=point["notice"],
                     max_jobs=self.max_jobs,
                     offline=offline)
+                faults = point["faults"]
+                if faults is not None:
+                    # suffix keeps scenario labels (the runner's
+                    # regime-mapping key) unique across fault cells
+                    scenario = replace(
+                        scenario, faults=faults,
+                        name=f"{scenario.label}/f:{faults}")
                 out.append((regime, scenario))
         return out
 
@@ -289,6 +298,15 @@ def _axes_of(table: Mapping, where: str, fail) -> Dict[str, tuple]:
 
 
 def _validate_axis(axis: str, v: object) -> Optional[str]:
+    if axis == "faults":
+        if not isinstance(v, str):
+            return f"faults value {v!r} must be a fault-spec string"
+        from repro.faults import resolve_faults
+        try:
+            resolve_faults(v)
+        except ValueError as e:
+            return str(e)
+        return None
     if axis == "notice":
         if not isinstance(v, str):
             return f"notice value {v!r} must be a mix name string"

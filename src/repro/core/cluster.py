@@ -1,11 +1,14 @@
 """Node accounting for the hybrid-workload cluster.
 
-The ledger tracks four disjoint pools whose sizes always sum to N:
+The ledger tracks six disjoint pools whose sizes always sum to N:
 
   free                 idle, unreserved
   od_reserved[od]      idle, reserved for a noticed on-demand job (CUA/CUP)
   job_hold[jid]        idle, returned-lease nodes held for a preempted job
   running occupancy    sum of cur_size over running jobs
+  down                 failed, awaiting repair (fault injection, repro.faults)
+  draining             quarantined by the service after persistent launch
+                       failures; never scheduled until an operator undrains
 
 Reserved nodes may be *borrowed* by backfilled jobs (paper §III-B1): the
 borrowed count moves from od_reserved into running occupancy and is tracked
@@ -24,6 +27,8 @@ class NodeLedger:
     od_reserved: Dict[int, int] = field(default_factory=dict)
     job_hold: Dict[int, int] = field(default_factory=dict)
     occupied: int = 0
+    down: int = 0
+    draining: int = 0
 
     def __post_init__(self) -> None:
         if self.free < 0:
@@ -32,13 +37,21 @@ class NodeLedger:
     # -- invariant ----------------------------------------------------------
     def check(self) -> None:
         s = (self.free + sum(self.od_reserved.values())
-             + sum(self.job_hold.values()) + self.occupied)
+             + sum(self.job_hold.values()) + self.occupied
+             + self.down + self.draining)
         assert s == self.total, (
             f"node leak: free={self.free} od_res={self.od_reserved} "
-            f"hold={self.job_hold} occ={self.occupied} != {self.total}")
+            f"hold={self.job_hold} occ={self.occupied} down={self.down} "
+            f"draining={self.draining} != {self.total}")
         assert self.free >= 0
+        assert self.down >= 0 and self.draining >= 0
         assert all(v >= 0 for v in self.od_reserved.values())
         assert all(v >= 0 for v in self.job_hold.values())
+
+    @property
+    def up(self) -> int:
+        """Nodes currently part of the schedulable machine."""
+        return self.total - self.down - self.draining
 
     # -- reservations ---------------------------------------------------------
     def reserve_from_free(self, od: int, want: int) -> int:
@@ -118,6 +131,53 @@ class NodeLedger:
         assert k <= self.occupied
         self.occupied -= k
         self.add_hold(jid, k)
+
+    # -- failure / repair / quarantine (repro.faults, service hardening) -----
+    def fail_free(self) -> None:
+        assert self.free > 0
+        self.free -= 1
+        self.down += 1
+
+    def fail_reserved(self, od: int) -> None:
+        have = self.od_reserved[od]
+        assert have > 0
+        if have == 1:
+            del self.od_reserved[od]
+        else:
+            self.od_reserved[od] = have - 1
+        self.down += 1
+
+    def fail_hold(self, jid: int) -> None:
+        have = self.job_hold[jid]
+        assert have > 0
+        if have == 1:
+            del self.job_hold[jid]
+        else:
+            self.job_hold[jid] = have - 1
+        self.down += 1
+
+    def fail_occupied(self) -> None:
+        assert self.occupied > 0
+        self.occupied -= 1
+        self.down += 1
+
+    def repair(self) -> None:
+        """A downed node comes back; it re-enters the free pool (the
+        simulator routes it onward like any release)."""
+        assert self.down > 0
+        self.down -= 1
+        self.free += 1
+
+    def drain_free(self) -> None:
+        """Quarantine one idle node (service launch-failure handling)."""
+        assert self.free > 0
+        self.free -= 1
+        self.draining += 1
+
+    def undrain(self) -> None:
+        assert self.draining > 0
+        self.draining -= 1
+        self.free += 1
 
 
 @dataclass

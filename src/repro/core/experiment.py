@@ -108,6 +108,16 @@ class RunResult:
     summary: Optional[dict] = None
 
 
+def _sim_kw(spec: RunSpec) -> dict:
+    """RunSpec sim overrides + the scenario's fault axis (an explicit
+    sim_kw["faults"] wins over the Scenario field)."""
+    kw = dict(spec.sim_kw)
+    faults = getattr(spec.workload, "faults", None)
+    if faults is not None and "faults" not in kw:
+        kw["faults"] = faults
+    return kw
+
+
 def _execute(spec: RunSpec) -> RunResult:
     """Top-level so process pools can pickle it."""
     t0 = time.perf_counter()
@@ -120,7 +130,7 @@ def _execute(spec: RunSpec) -> RunResult:
             jobs = ThetaGenerator(wcfg).iter_jobs()
             n_nodes = wcfg.n_nodes
         cfg = SimConfig(n_nodes=n_nodes, mechanism=spec.mechanism,
-                        **dict(spec.sim_kw))
+                        **_sim_kw(spec))
         sink = StreamingMetrics(instant_eps=cfg.instant_eps)
         sim = Simulator(cfg, jobs, record_sink=sink)
         sim.run()
@@ -134,7 +144,7 @@ def _execute(spec: RunSpec) -> RunResult:
         jobs = generate(wcfg)
         n_nodes = wcfg.n_nodes
     cfg = SimConfig(n_nodes=n_nodes, mechanism=spec.mechanism,
-                    **dict(spec.sim_kw))
+                    **_sim_kw(spec))
     sim = Simulator(cfg, jobs)
     sim.run()
     summary = (summarize_records(sim.records, spec.summary_records)

@@ -40,6 +40,14 @@ class Metrics:
     # max(t_actual, 10s)).  Keyword-defaulted so checkpoints and golden
     # rows written before the field existed still round-trip.
     avg_bounded_slowdown: Optional[float] = None
+    # Fault-axis columns (repro.faults): populated only when a fault
+    # model is active, None (and dropped from as_dict) on a perfect
+    # machine, so golden rows written before the axis existed — and
+    # every faults="none" run — keep an unchanged schema.
+    n_node_failures: Optional[int] = None        # node_down events applied
+    n_interruptions: Optional[int] = None        # running jobs hit
+    lost_work_node_h: Optional[float] = None     # work+setup lost to faults
+    goodput: Optional[float] = None              # useful / up-capacity integral
 
     def as_dict(self) -> Dict[str, float]:
         return {k: v for k, v in self.__dict__.items() if v is not None}
@@ -54,6 +62,43 @@ def bounded_slowdown(turnaround: float, t_actual: float,
                      tau: float = 10.0) -> float:
     """BSLD for one job: max(1, turnaround / max(t_actual, tau))."""
     return max(1.0, turnaround / max(t_actual, tau))
+
+
+def _fault_metrics(sim: Simulator, completed_work: float) -> Dict[str, float]:
+    """Fault-axis Metrics kwargs; empty (fields stay None) on a perfect
+    machine.  Goodput is the node-seconds of *work that completed* over
+    the up-capacity integral ∫(total - down - draining)dt — the fraction
+    of the machine that actually existed which produced finished results.
+    (The legacy ``occupied - waste`` utilization proxy is kept unchanged
+    but can go negative under heavy restart thrash, because every
+    preemption pre-charges a restart setup that a later fault may kill
+    mid-setup; see docs/faults.md.)  The denominator is snapshotted at
+    the last job completion, so trailing fault events beyond the
+    workload's span do not dilute it."""
+    if getattr(sim, "fault_model_name", "none") == "none":
+        return {}
+    denom = sim.avail_at_completion or sim.avail_integral
+    return {
+        "n_node_failures": sim.fault_downs,
+        "n_interruptions": sim.n_interruptions,
+        "lost_work_node_h": sim.fault_lost_node_s / 3600.0,
+        "goodput": (completed_work / denom if denom > 0 else float("nan")),
+    }
+
+
+def records_sha256(records: Mapping[int, JobRecord]) -> str:
+    """Job-for-job digest over the deterministic per-record outcome
+    fields — the repeatability gate for fault-enabled cells (same
+    mechanism, scenario, seed, and fault spec must reproduce it)."""
+    import hashlib
+    import json
+    h = hashlib.sha256()
+    for jid in sorted(records):
+        r = records[jid]
+        h.update(json.dumps(
+            [jid, r.job.jtype.value, r.first_start, r.completion,
+             r.killed, r.n_preempted, r.n_shrunk, r.instant]).encode())
+    return h.hexdigest()
 
 
 def summarize_records(records: Mapping[int, JobRecord],
@@ -206,6 +251,7 @@ class StreamingMetrics:
         self.bsld = Welford()
         self.seen = {t: 0 for t in JobType}
         self.completed = 0
+        self.completed_work = 0.0   # node-seconds of finished (unkilled) work
         self.od_instant = 0
         self.preempted = {t: 0 for t in JobType}
         self.shrunk_malleable = 0
@@ -223,6 +269,8 @@ class StreamingMetrics:
         self.first_submit = min(self.first_submit, job.submit_time)
         if rec.completion is not None:
             self.completed += 1
+            if not rec.killed:
+                self.completed_work += job.work
         t = rec.turnaround
         if t is not None:
             self.turn[job.jtype].add(t)
@@ -281,6 +329,7 @@ class StreamingMetrics:
             n_jobs=n,
             decision_p99_ms=dec,
             avg_bounded_slowdown=self.bsld.result(),
+            **_fault_metrics(sim, self.completed_work),
         )
 
     def summary(self) -> dict:
@@ -342,4 +391,7 @@ def collect(sim: Simulator) -> Metrics:
             float(np.mean([bounded_slowdown(r.turnaround, r.job.t_actual)
                            for r in recs if r.turnaround is not None]))
             if any(r.turnaround is not None for r in recs) else float("nan")),
+        **_fault_metrics(sim, sum(
+            r.job.work for r in recs
+            if r.completion is not None and not r.killed)),
     )

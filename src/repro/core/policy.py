@@ -108,7 +108,9 @@ class SchedulerView:
                           running set, maintained incrementally — feed
                           them to decision.easy_shadow
 
-    `now` and `free` change every event and are properties.
+    `now` and `free` change every event and are properties, as are the
+    fault-axis counters `down` / `draining` and the active `fault_model`
+    name (repro.faults; all zero/"none" on a perfect machine).
     """
 
     def __init__(self, sim: "Simulator"):
@@ -137,6 +139,21 @@ class SchedulerView:
     @property
     def free(self) -> int:
         return self._sim.ledger.free
+
+    @property
+    def down(self) -> int:
+        """Failed nodes awaiting repair (repro.faults)."""
+        return self._sim.ledger.down
+
+    @property
+    def draining(self) -> int:
+        """Quarantined nodes (service launch-failure handling)."""
+        return self._sim.ledger.draining
+
+    @property
+    def fault_model(self) -> str:
+        """Active fault-model name; "none" on a perfect machine."""
+        return self._sim.fault_model_name
 
     def od_front(self, jid: int) -> bool:
         return bool(self.od_front_map.get(jid))

@@ -56,6 +56,12 @@ class SimConfig:
     #: late window; the default covers the paper's minutes-scale leads
     #: with a wide margin while keeping the ingested-ahead set small.
     arrival_lookahead: float = 14400.0
+    #: fault-model spec (repro.faults): "none" (default, bit-for-bit
+    #: legacy), a compact string like "exp-mtbf:mtbf_h=168,mttr_h=2",
+    #: or a {"model": ..., ...params} dict.  Resolved once at
+    #: construction; the failure/repair stream is materialized into the
+    #: event heap up front so injection is deterministic per spec.
+    faults: object = "none"
 
     # legacy introspection helpers; composite mechanisms ("BASE") have no
     # "&" and report themselves on both axes.
@@ -129,6 +135,38 @@ class Simulator:
         self.est_remaining: Dict[int, float] = {}
         self._epochs: Dict[int, int] = {}    # monotonic per-jid END epoch
         self._estend_cache: Dict[int, Tuple[float, int]] = {}  # jid -> (est-end base, cur_size)
+        # ---- fault injection (repro.faults) -------------------------------
+        # The failure/repair stream is materialized up front in its own
+        # seq namespace (trace < fault < dynamic at equal times), so the
+        # event order is a pure function of the spec — independent of
+        # feed timing, step_until partitioning, and the job trace.
+        self.fault_model_name = "none"
+        self._faults_on = False
+        self._down_nodes: set = set()
+        self._fault_shrunk: Dict[int, int] = {}  # jid -> nodes owed back
+        self.fault_downs = 0                 # node_down events applied
+        self.fault_ups = 0                   # node_up events applied
+        self.n_interruptions = 0             # running jobs hit by a failure
+        self.fault_lost_node_s = 0.0         # node-seconds of work + setup lost
+        self.avail_integral = 0.0            # ∫ up-node count dt
+        # snapshot at the latest completion: the goodput denominator is
+        # the up-capacity over [0, finish_time], not over the (possibly
+        # much longer) fault-event horizon
+        self.avail_at_completion = 0.0
+        if cfg.faults not in (None, "none"):
+            from ..faults import resolve_faults
+            model = resolve_faults(cfg.faults)
+            if model.name != "none":
+                import numpy as np
+                self._faults_on = True
+                self.fault_model_name = model.name
+                self.fault_model = model
+                self._fault_rng = np.random.default_rng([model.seed, 0xD01D])
+                for i, ev in enumerate(model.events(cfg.n_nodes)):
+                    heapq.heappush(
+                        self._heap,
+                        (ev.t, self._FAULT_SEQ_BASE + i,
+                         "node_" + ev.kind, (ev.node,)))
         self.ops = SchedulerOps(self)        # the handle policies act through
         self._queue_key = self.policies.queue.make_order_key(self.ops)
         self.queue.configure(self._queue_key,
@@ -162,8 +200,13 @@ class Simulator:
     # pushing every trace event up front — so lazy ingestion cannot
     # reorder simultaneous events (integer-second SWF traces collide
     # constantly) and streaming stays tie-for-tie identical to the list
-    # path.
+    # path.  Fault events (node_down/node_up, repro.faults) sit between
+    # the two: at equal times a failure lands after the trace event but
+    # before any dynamically scheduled END — and their seq is the index
+    # into the materialized fault stream, so it never interacts with
+    # either counter.
     _DYN_SEQ_BASE = 1 << 60
+    _FAULT_SEQ_BASE = 1 << 59
 
     def _push(self, t: float, kind: str, data: tuple) -> None:
         heapq.heappush(self._heap,
@@ -207,8 +250,14 @@ class Simulator:
         nxt = self._next_arrival
         if nxt is None:
             return
-        horizon = (self._heap[0][0] if self._heap else nxt.submit_time) \
-            + self.cfg.arrival_lookahead
+        # anchor on the *earlier* of next event and next arrival: a
+        # far-future heap event (a fault stream's next repair during a
+        # quiet spell) must not drag the whole remaining trace into
+        # memory.  The very next arrival is always within lookahead of
+        # itself, so due arrivals are never missed.
+        base = nxt.submit_time if not self._heap \
+            else min(self._heap[0][0], nxt.submit_time)
+        horizon = base + self.cfg.arrival_lookahead
         while nxt is not None and nxt.submit_time <= horizon:
             self._ingest(nxt)
             nxt = next(self._arrivals, None)
@@ -216,7 +265,11 @@ class Simulator:
 
     def _advance(self, t: float) -> None:
         assert t >= self.now - 1e-9
-        self.occupied_integral += self.ledger.occupied * max(0.0, t - self._last_t)
+        dt = max(0.0, t - self._last_t)
+        self.occupied_integral += self.ledger.occupied * dt
+        if self._faults_on:
+            self.avail_integral += (self.ledger.total - self.ledger.down
+                                    - self.ledger.draining) * dt
         self._last_t = t
         self.now = max(self.now, t)
 
@@ -369,10 +422,17 @@ class Simulator:
         self.queue.invalidate(jid)
 
     # -------------------------------------------------- preempt / shrink / expand
-    def _preempt(self, jid: int, beneficiary: Optional[int] = None) -> None:
-        """Vacate a running job; nodes go to `beneficiary`'s reservation."""
+    def _preempt(self, jid: int, beneficiary: Optional[int] = None,
+                 lost: int = 0) -> None:
+        """Vacate a running job; nodes go to `beneficiary`'s reservation.
+
+        ``lost`` nodes (a fault killed them under the job) are not
+        routed anywhere — the caller already moved them to the ledger's
+        down pool, so only ``cur_size - lost`` nodes are released."""
         rs = self.running.pop(jid)
         self._estend_cache.pop(jid, None)
+        if self._fault_shrunk:
+            self._fault_shrunk.pop(jid, None)
         job = rs.job
         rec = self.records[jid]
         rec.n_preempted += 1
@@ -394,7 +454,7 @@ class Simulator:
             rem += math.floor(rem / job.ckpt_interval) * job.ckpt_overhead
         self.est_remaining[jid] = job.t_setup + rem * slack + 60.0
         # ---- node routing: borrowed -> owners, rest -> beneficiary/releases
-        freed = rs.cur_size
+        freed = rs.cur_size - lost
         for od, k in rs.borrowed.items():
             k = min(k, freed)
             if self.od_status.get(od) == "noticed":
@@ -456,6 +516,168 @@ class Simulator:
 
     def _lease(self, od: int, lender: int, k: int, kind: str) -> None:
         self.leases.setdefault(od, []).append(Lease(lender, k, kind))
+
+    # ------------------------------------------------------------ node faults
+    def _on_node_down(self, node: int) -> None:
+        """A node fails (repro.faults).  The count-based ledger has no
+        per-node identity, so "which node died" maps to "which pool was
+        hit" at the moment of failure: one draw from the fault rng,
+        uniform over all in-play nodes, walked through the pools in a
+        fixed order (free, od reservations, holds, running occupancy in
+        insertion order).  Draws are consumed in event order, so the
+        whole run is deterministic per fault spec."""
+        if node in self._down_nodes:
+            return  # node already out (overlapping trace entries)
+        led = self.ledger
+        in_play = (led.free + sum(led.od_reserved.values())
+                   + sum(led.job_hold.values()) + led.occupied)
+        if in_play <= 0:
+            return  # machine already fully down/draining
+        self._down_nodes.add(node)
+        self.fault_downs += 1
+        r = int(self._fault_rng.integers(in_play))
+        if r < led.free:
+            led.fail_free()
+        else:
+            r -= led.free
+            hit_od = None
+            for od, k in led.od_reserved.items():
+                if r < k:
+                    hit_od = od
+                    break
+                r -= k
+            if hit_od is not None:
+                # the reservation shrinks; its owner re-collects the
+                # shortfall from later releases/repairs
+                led.fail_reserved(hit_od)
+            else:
+                hit_hold = None
+                for jid, k in led.job_hold.items():
+                    if r < k:
+                        hit_hold = jid
+                        break
+                    r -= k
+                if hit_hold is not None:
+                    led.fail_hold(hit_hold)
+                else:
+                    victim = None
+                    for jid, rs in self.running.items():
+                        if r < rs.cur_size:
+                            victim = jid
+                            break
+                        r -= rs.cur_size
+                    assert victim is not None, "pool walk exhausted in-play nodes"
+                    self._fault_hit_running(victim)
+        self._sched_pending = True
+
+    def _fault_hit_running(self, victim: int) -> None:
+        """Apply the paper's per-type semantics to the job that owned the
+        failed node: malleable jobs shed it and keep running, rigid jobs
+        restart from their last Daly checkpoint (§IV), on-demand jobs are
+        re-dispatched with the wait clock still running."""
+        rs = self.running[victim]
+        job = rs.job
+        self.n_interruptions += 1
+        if job.jtype is JobType.MALLEABLE and rs.cur_size > max(job.n_min, 1):
+            self._fault_shrink(victim)
+            return
+        # the job dies with the node: account the lost slice, move the
+        # node out of occupancy, then route through the normal restart
+        # machinery with the downed node excluded from release routing.
+        done = rs.work_done(self.now)
+        self.ledger.fail_occupied()
+        if job.jtype is JobType.ONDEMAND and self.policies.od_aware:
+            self._fault_evict_od(victim)
+            return
+        if job.jtype is JobType.MALLEABLE:
+            ckpt = done                     # 2-min-warning checkpoint model
+        else:
+            ckpt = rs.checkpointed_work(self.now)
+        self.fault_lost_node_s += (done - ckpt) + job.t_setup * job.size
+        self._preempt(victim, lost=1)
+
+    def _fault_shrink(self, jid: int) -> None:
+        """A malleable job sheds the failed node and keeps running; the
+        repair hands the node back (expand-back) ahead of the free pool."""
+        rs = self.running[jid]
+        rs.work_at_resize = rs.work_done(self.now)
+        rs.last_resize = max(self.now, rs.last_resize)
+        rs.cur_size -= 1
+        self.records[jid].n_shrunk += 1
+        self.ledger.fail_occupied()
+        self._fault_shrunk[jid] = self._fault_shrunk.get(jid, 0) + 1
+        self._reschedule_end(jid)
+
+    def _fault_evict_od(self, jid: int) -> None:
+        """Re-dispatch a fault-killed on-demand job.  On-demand jobs have
+        no checkpoints, so all progress is lost; ``submit_time`` is kept
+        so Obs-style responsiveness is measured *through* the failure.
+        The surviving nodes become the job's own reservation and the
+        arrival policy re-acquires the shortfall exactly as at a fresh
+        arrival (caller already moved the downed node out of occupancy)."""
+        rs = self.running.pop(jid)
+        self._estend_cache.pop(jid, None)
+        job = rs.job
+        rec = self.records[jid]
+        rec.n_preempted += 1
+        done = rs.work_done(self.now)
+        waste = done + job.t_setup * job.size
+        self.waste_node_seconds += waste
+        self.fault_lost_node_s += waste
+        self.progress[jid] = {"done_work": 0.0, "ckpt_work": 0.0,
+                              "n_starts": rs.n_starts}
+        slack = max(1.0, job.t_estimate / max(job.t_actual, 1.0))
+        self.est_remaining[jid] = job.t_setup + (job.work / job.size) * slack + 60.0
+        self._epochs[jid] = self._epochs.get(jid, 0) + 1  # void pending END
+        assert not rs.borrowed, "on-demand jobs never borrow"
+        freed = rs.cur_size - 1
+        if freed > 0:
+            self.ledger.occupied_to_reserved(jid, freed)
+        need = job.size - self.ledger.reserved_of(jid) - self.ledger.free
+        if need <= 0:
+            self._start_od(jid)
+        elif not self.policies.arrival.acquire(self.ops, jid, need):
+            self.od_front[jid] = True
+            self.queue.append(jid)
+            if jid not in self.collecting:
+                self.collecting.append(jid)
+
+    def _on_node_up(self, node: int) -> None:
+        """A failed node is repaired: it re-enters service and is routed
+        like a release — collecting on-demand reservations first (paper
+        od priority), then expand-back for fault-shrunk malleables when
+        no queued job could claim it, else the free pool for the
+        scheduling pass."""
+        if node not in self._down_nodes:
+            return  # repair for a node that never went down (trace noise)
+        self._down_nodes.remove(node)
+        self.fault_ups += 1
+        self.ledger.repair()
+        for od in list(self.collecting):
+            if self.ledger.free == 0:
+                break
+            job = self.jobs[od]
+            want = job.size - self.ledger.reserved_of(od)
+            if want > 0:
+                self.ledger.reserve_from_free(od, want)
+            if self.ledger.reserved_of(od) >= job.size:
+                self.collecting.remove(od)
+                if self.od_status.get(od) == "arrived":
+                    self.queue.remove(od)
+                    self._start_od(od)
+        if self.ledger.free > 0 and not self.queue and self._fault_shrunk:
+            for jid in list(self._fault_shrunk):
+                if jid not in self.running:
+                    del self._fault_shrunk[jid]
+                    continue
+                got = self._expand_from_free(jid, self._fault_shrunk[jid])
+                if got >= self._fault_shrunk[jid]:
+                    del self._fault_shrunk[jid]
+                else:
+                    self._fault_shrunk[jid] -= got
+                if self.ledger.free == 0:
+                    break
+        self._sched_pending = True
 
     # --------------------------------------------------------------- run / end
     def _begin_run(self, jid: int, size: int) -> None:
@@ -519,6 +741,8 @@ class Simulator:
         killed = done < job.work - 1e-6
         del self.running[jid]
         self._estend_cache.pop(jid, None)
+        if self._fault_shrunk:
+            self._fault_shrunk.pop(jid, None)
         rec = self.records[jid]
         rec.completion = self.now
         rec.killed = killed
@@ -537,6 +761,8 @@ class Simulator:
         if freed > 0:
             self._route_release(freed)
         self._last_completion = max(self._last_completion, self.now)
+        if self._faults_on:
+            self.avail_at_completion = self.avail_integral
         if self.record_sink is not None:
             self._retire(jid, rec)
         self._sched_pending = True

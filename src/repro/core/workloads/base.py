@@ -322,6 +322,12 @@ class Scenario:
     #: param (winning over ``params``) so trace clipping and the
     #: on-demand size cap match the simulated machine
     n_nodes: Optional[int] = None
+    #: fault-model spec (repro.faults): None/"none" for the legacy
+    #: perfect machine, else a compact string ("exp-mtbf:mtbf_h=168")
+    #: or a {"model": ...} dict.  Experiment threads it into
+    #: ``SimConfig.faults`` for every run of this scenario (explicit
+    #: ``sim_kw["faults"]`` overrides win).
+    faults: object = None
 
     @property
     def label(self) -> str:
@@ -353,6 +359,9 @@ class Scenario:
             if path is not None and not os.path.exists(path):
                 raise WorkloadDataError(
                     f"scenario {self.label!r}: trace file not found: {path}")
+        if self.faults not in (None, "none"):
+            from ...faults import resolve_faults
+            resolve_faults(self.faults)  # raises on unknown model / bad params
 
     def realize(self, seed: Optional[int] = None
                 ) -> Tuple[List[JobSpec], int]:

@@ -12,24 +12,30 @@ Deliberately jax-free at import: shadow mode (ReplayClock +
 DryrunLauncher) runs on CPU-only CI; only LiveClusterLauncher touches
 the elastic runtime, and only through the cluster object handed to it.
 """
-from .admission import AdmissionQueue
+from .admission import (BACKPRESSURE_POLICIES, AdmissionQueue,
+                        AdmissionRejected)
 from .clock import ReplayClock
 from .core import ServiceCore
-from .daemon import (FidelityReport, SchedulerService, ServiceConfig,
-                     ShadowReport, shadow_fidelity)
-from .decisionlog import (MEASUREMENT_KEYS, DecisionLog, decision_digest,
-                          read_decision_log)
+from .daemon import (FidelityReport, RecoveryReport, SchedulerService,
+                     ServiceConfig, ShadowReport, shadow_fidelity)
+from .decisionlog import (DIGEST_EXEMPT_EVENTS, MEASUREMENT_KEYS,
+                          DecisionLog, TornLogError, decision_digest,
+                          log_segments, read_decision_log)
 from .launchers import (DryrunLauncher, Launcher, LiveClusterLauncher,
-                        NullLauncher, ShadowLaunchError, plan_requests)
+                        NullLauncher, RetryPolicy, RetryingLauncher,
+                        ShadowLaunchError, TransientLaunchError,
+                        plan_requests)
 from .slo import SloMonitor, SloPolicy, SloReport
 
 __all__ = [
-    "AdmissionQueue", "ReplayClock", "ServiceCore",
-    "FidelityReport", "SchedulerService", "ServiceConfig", "ShadowReport",
-    "shadow_fidelity",
-    "MEASUREMENT_KEYS", "DecisionLog", "decision_digest",
-    "read_decision_log",
+    "AdmissionQueue", "AdmissionRejected", "BACKPRESSURE_POLICIES",
+    "ReplayClock", "ServiceCore",
+    "FidelityReport", "RecoveryReport", "SchedulerService", "ServiceConfig",
+    "ShadowReport", "shadow_fidelity",
+    "DIGEST_EXEMPT_EVENTS", "MEASUREMENT_KEYS", "DecisionLog",
+    "TornLogError", "decision_digest", "log_segments", "read_decision_log",
     "DryrunLauncher", "Launcher", "LiveClusterLauncher", "NullLauncher",
-    "ShadowLaunchError", "plan_requests",
+    "RetryPolicy", "RetryingLauncher", "ShadowLaunchError",
+    "TransientLaunchError", "plan_requests",
     "SloMonitor", "SloPolicy", "SloReport",
 ]

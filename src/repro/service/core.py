@@ -47,6 +47,8 @@ class ServiceCore(Simulator):
         self._pending: List[Dict] = []
         self._dseq = itertools.count()
         self.n_decisions = 0
+        self._pending_quarantine = 0
+        self.n_quarantined = 0
         super().__init__(cfg, jobs, record_sink=record_sink)
 
     # ------------------------------------------------------------- narration
@@ -56,6 +58,17 @@ class ServiceCore(Simulator):
         row.update(detail)
         self._pending.append(row)
         self.n_decisions += 1
+
+    def _emit_runtime(self, event: str, jid: int, **detail) -> None:
+        """Emit a runtime observation row (``seq=-1``).  These record
+        backend incidents, not scheduling decisions: they consume no
+        decision seq and do not count toward ``n_decisions``, so the
+        deterministic decision stream — and its digest — is identical
+        with or without them (see DIGEST_EXEMPT_EVENTS)."""
+        row = {"seq": -1, "t_sim": round(self.now, 6),
+               "event": event, "jid": jid}
+        row.update(detail)
+        self._pending.append(row)
 
     def drain_decisions(self) -> List[Dict]:
         """Hand off (and clear) the decisions emitted since the last
@@ -100,11 +113,17 @@ class ServiceCore(Simulator):
                    restart=restart)
         super()._begin_run(jid, size)
 
-    def _preempt(self, jid: int, beneficiary: Optional[int] = None) -> None:
+    def _preempt(self, jid: int, beneficiary: Optional[int] = None,
+                 lost: int = 0) -> None:
         rs = self.running[jid]
         self.launcher.preempt(rs.job)
-        self._emit("preempt", jid, size=rs.cur_size, beneficiary=beneficiary)
-        super()._preempt(jid, beneficiary=beneficiary)
+        if lost:
+            self._emit("preempt", jid, size=rs.cur_size,
+                       beneficiary=beneficiary, lost=lost)
+        else:   # legacy detail shape — keeps fault-free digests unchanged
+            self._emit("preempt", jid, size=rs.cur_size,
+                       beneficiary=beneficiary)
+        super()._preempt(jid, beneficiary=beneficiary, lost=lost)
 
     def _shrink(self, jid: int, k: int, od: int) -> None:
         rs = self.running[jid]
@@ -136,3 +155,48 @@ class ServiceCore(Simulator):
         super()._on_od_timeout(jid)
         if fired:
             self._emit("od_timeout", jid, released=released)
+
+    # ------------------------------------------------- narrated fault events
+    def _on_node_down(self, node: int) -> None:
+        if node not in self._down_nodes:   # mirror the super's dedup guard
+            self._emit("node_down", -1, node=node)
+        super()._on_node_down(node)
+
+    def _on_node_up(self, node: int) -> None:
+        if node in self._down_nodes:
+            self._emit("node_up", -1, node=node)
+        super()._on_node_up(node)
+
+    def _fault_shrink(self, jid: int) -> None:
+        rs = self.running[jid]
+        new_size = rs.cur_size - 1
+        self.launcher.resize(rs.job, new_size)
+        self._emit("fault_shrink", jid, new_size=new_size)
+        super()._fault_shrink(jid)
+
+    def _fault_evict_od(self, jid: int) -> None:
+        rs = self.running[jid]
+        self.launcher.preempt(rs.job)
+        self._emit("fault_evict", jid, size=rs.cur_size)
+        super()._fault_evict_od(jid)
+
+    # ------------------------------------------------------------ quarantine
+    def quarantine(self, k: int = 1) -> None:
+        """Request that ``k`` nodes be pulled from service (a persistent
+        launch failure suggests bad hardware).  Nodes move free→draining
+        lazily, at the next scheduling pass, and only while the free
+        pool has them to give — the base Simulator's hot path is never
+        touched, and a busy cluster drains as nodes free up."""
+        self._pending_quarantine += k
+
+    def _apply_pending_quarantine(self) -> None:
+        while self._pending_quarantine > 0 and self.ledger.free > 0:
+            self.ledger.drain_free()
+            self._pending_quarantine -= 1
+            self.n_quarantined += 1
+            self._emit_runtime("quarantine", -1, draining=self.ledger.draining)
+
+    def _schedule(self) -> None:
+        if self._pending_quarantine:
+            self._apply_pending_quarantine()
+        super()._schedule()

@@ -29,8 +29,8 @@ from __future__ import annotations
 
 import math
 import time
-from dataclasses import dataclass, field
-from typing import Callable, Dict, Iterable, List, Optional
+from dataclasses import dataclass, field, replace
+from typing import Callable, Dict, Iterable, List, Optional, Tuple
 
 from repro.core.job import JobSpec
 from repro.core.simulator import JobRecord, SimConfig, Simulator
@@ -38,8 +38,9 @@ from repro.core.simulator import JobRecord, SimConfig, Simulator
 from .admission import AdmissionQueue
 from .clock import ReplayClock
 from .core import ServiceCore
-from .decisionlog import DecisionLog, decision_digest
-from .launchers import DryrunLauncher, Launcher, NullLauncher
+from .decisionlog import (DIGEST_EXEMPT_EVENTS, DecisionLog, decision_digest)
+from .launchers import (DryrunLauncher, Launcher, NullLauncher,
+                        RetryingLauncher)
 from .slo import SloMonitor, SloPolicy
 
 
@@ -54,6 +55,10 @@ class ServiceConfig:
     speed: float = math.inf
     decision_log_path: Optional[str] = None
     keep_log_rows: bool = True
+    #: rotate the decision log to ``<path>.<n>`` past this size (None = never)
+    log_rotate_bytes: Optional[int] = None
+    #: pull a node from service when a launch action fails persistently
+    quarantine_on_launch_failure: bool = True
     slo: SloPolicy = field(default_factory=SloPolicy)
     sim_overrides: Dict[str, object] = field(default_factory=dict)
 
@@ -75,6 +80,7 @@ class ShadowReport:
     latency: Dict[str, float]     # decision-latency summary (ms)
     slo: Dict                     # SloReport.as_dict()
     launcher_counts: Optional[Dict[str, int]] = None
+    admission_counts: Optional[Dict[str, int]] = None   # live mode only
 
     def as_dict(self) -> dict:
         return dict(self.__dict__)
@@ -105,9 +111,28 @@ class SchedulerService:
         self.core = ServiceCore(cfg.sim_config(), jobs,
                                 launcher=self.launcher, record_sink=sink)
         self.log = DecisionLog(cfg.decision_log_path,
-                               keep_rows=cfg.keep_log_rows)
+                               keep_rows=cfg.keep_log_rows,
+                               rotate_bytes=cfg.log_rotate_bytes)
+        if isinstance(self.launcher, RetryingLauncher) and \
+                self.launcher.on_give_up is None:
+            self.launcher.on_give_up = self._on_launch_failed
         self.clock: Optional[ReplayClock] = None
+        self._admission: Optional[AdmissionQueue] = None
         self.wall_s = 0.0
+
+    def _on_launch_failed(self, action: str, subject, exc: Exception) -> None:
+        """A backend action failed persistently (RetryingLauncher gave
+        up).  Record it as a runtime row — ``seq=-1``, digest-exempt, so
+        the fidelity fingerprint is untouched — and optionally pull a
+        node out of service on the theory that repeated launch failures
+        mean bad hardware."""
+        jid = getattr(subject, "jid",
+                      getattr(getattr(subject, "job", None), "jid", -1))
+        self.log.append({"seq": -1, "t_sim": round(self.core.now, 6),
+                         "event": "launch_failed", "jid": jid,
+                         "action": action, "error": str(exc)})
+        if self.cfg.quarantine_on_launch_failure:
+            self.core.quarantine(1)
 
     # ------------------------------------------------------------ event loop
     def _step_batch(self, t_next: float) -> None:
@@ -152,6 +177,7 @@ class SchedulerService:
         returns once the queue is closed and the core has drained.  The
         core must have been built with ``jobs=[]`` (see
         ``ServiceCore.admit``)."""
+        self._admission = admission
         t0_wall = time.monotonic()
         self.clock = ReplayClock(self.cfg.speed, origin=self.core.now)
         while True:
@@ -176,13 +202,96 @@ class SchedulerService:
     def report(self) -> ShadowReport:
         slo = self.monitor.report()
         counts = getattr(self.launcher, "counts", None)
+        adm = self._admission
         return ShadowReport(
             ok=slo.ok, digest=self.log.digest,
             n_decisions=self.log.n_rows, n_jobs=self.core.n_ingested,
             finish_time=self.core.finish_time(),
             wall_s=round(self.wall_s, 3),
             latency=self.log.latency_summary(), slo=slo.as_dict(),
-            launcher_counts=dict(counts) if counts is not None else None)
+            launcher_counts=dict(counts) if counts is not None else None,
+            admission_counts=dict(adm.counts) if adm is not None else None)
+
+    # -------------------------------------------------------------- recovery
+    @classmethod
+    def recover(cls, cfg: ServiceConfig, jobs: Iterable[JobSpec],
+                launcher: Optional[Launcher] = None,
+                record_sink: Optional[Callable[[JobRecord], None]] = None
+                ) -> Tuple["SchedulerService", "RecoveryReport"]:
+        """Resume a killed daemon from its on-disk decision log.
+
+        Because the decision stream is a pure function of
+        (trace, mechanism), recovery is deterministic replay: read every
+        complete row from the (possibly rotated, possibly torn) log at
+        ``cfg.decision_log_path``, build a fresh core over the same jobs,
+        and step it until it has re-made exactly the logged decisions.
+        The replayed prefix's digest must equal the logged prefix's —
+        proof the recovered core stands in the crashed daemon's exact
+        state — then any overshoot (decisions the crashed daemon made
+        but never flushed... impossible, or ones the replay batch made
+        past the last logged row) is appended, and the service continues
+        with the recovered log open for append.  The returned service's
+        eventual digest is identical to an uninterrupted run's.
+
+        Limitation: replay assumes the crashed run's *decision-affecting*
+        state came only from (trace, mechanism).  Runtime quarantines
+        (``launch_failed`` rows) shrink the free pool, so runs that
+        quarantined nodes cannot be byte-faithfully replayed — recovery
+        then reports ``digests_match=False`` rather than guessing.
+        """
+        if not cfg.decision_log_path:
+            raise ValueError("recover() needs cfg.decision_log_path")
+        log, rows = DecisionLog.recover(cfg.decision_log_path,
+                                        keep_rows=cfg.keep_log_rows,
+                                        rotate_bytes=cfg.log_rotate_bytes)
+        logged = [r for r in rows
+                  if r.get("event") not in DIGEST_EXEMPT_EVENTS]
+        k = len(logged)
+
+        bare = replace(cfg, decision_log_path=None)
+        svc = cls(bare, list(jobs), launcher=launcher,
+                  record_sink=record_sink)
+        svc.cfg = cfg
+        svc.log.close()
+        svc.log = log                 # appends continue the on-disk stream
+
+        replayed: List[Dict] = []
+        while svc.core.n_decisions < k:
+            t_next = svc.core.next_event_time()
+            if t_next is None:
+                break                 # log claims more decisions than trace
+            svc.core.step_until(t_next)
+            replayed.extend(svc.core.drain_decisions())
+        dec = [r for r in replayed
+               if r.get("event") not in DIGEST_EXEMPT_EVENTS]
+        runtime = [r for r in replayed
+                   if r.get("event") in DIGEST_EXEMPT_EVENTS]
+        prefix_digest = decision_digest(dec[:k])
+        digests_match = prefix_digest == decision_digest(logged)
+        for d in dec[k:] + runtime:   # decisions past the last flushed row
+            log.append(d)
+        report = RecoveryReport(
+            ok=digests_match, digests_match=digests_match,
+            n_log_rows=len(rows), n_decisions_recovered=k,
+            n_overshoot=max(0, len(dec) - k),
+            digest_prefix=prefix_digest, resumed_at=svc.core.now)
+        return svc, report
+
+
+@dataclass
+class RecoveryReport:
+    """What :meth:`SchedulerService.recover` reconstructed."""
+
+    ok: bool                      # replayed prefix digest == logged digest
+    digests_match: bool
+    n_log_rows: int               # complete rows read back (incl. runtime)
+    n_decisions_recovered: int    # decision rows the replay had to re-make
+    n_overshoot: int              # extra decisions the final batch produced
+    digest_prefix: str
+    resumed_at: float             # sim time the recovered core stands at
+
+    def as_dict(self) -> dict:
+        return dict(self.__dict__)
 
 
 # ------------------------------------------------------------------ fidelity

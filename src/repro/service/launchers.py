@@ -23,7 +23,10 @@ shadow run and a live run see the identical decision sequence.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+import random
+import time
+import warnings
+from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional
 
 from repro.core.job import JobSpec, JobType
@@ -33,6 +36,12 @@ from repro.core.simulator import JobRecord
 class ShadowLaunchError(RuntimeError):
     """The decision stream asked the launcher for an impossible action —
     a scheduler-core invariant was violated."""
+
+
+class TransientLaunchError(RuntimeError):
+    """A backend action failed in a way that retrying may fix (node
+    momentarily unreachable, RPC timeout, ...).  RetryingLauncher
+    retries these; anything else it treats as persistent."""
 
 
 class Launcher:
@@ -158,6 +167,122 @@ class DryrunLauncher(Launcher):
             raise ShadowLaunchError(
                 f"replay drained with jobs still marked running: "
                 f"{sorted(self.active)}")
+
+
+@dataclass
+class RetryPolicy:
+    """Exponential backoff with full jitter for flaky backend actions.
+
+    Delay before attempt ``i`` (1-based retries) is drawn uniformly in
+    ``[0, min(max_delay_s, base_delay_s * 2**(i-1))]`` — the classic
+    full-jitter scheme that decorrelates thundering retries.  The jitter
+    stream is its own seeded :class:`random.Random`, so retry timing
+    never touches the simulator's RNGs (decision determinism is
+    unaffected by how flaky the backend is).
+    """
+
+    retries: int = 3              # attempts AFTER the first try
+    base_delay_s: float = 0.05
+    max_delay_s: float = 2.0
+    timeout_s: Optional[float] = None   # per-attempt wall budget
+    jitter: bool = True
+    seed: int = 0
+
+
+class RetryingLauncher(Launcher):
+    """Wrap a launcher so transient backend failures do not kill the
+    daemon.
+
+    Each hook is tried up to ``1 + policy.retries`` times; only
+    :class:`TransientLaunchError` (and, with ``timeout_s``, a transient
+    attempt that overran its wall budget) is retried.
+    :class:`ShadowLaunchError` is a *scheduler* invariant violation and
+    is always re-raised immediately — retrying an illegal decision
+    cannot make it legal.  When retries are exhausted (or the error is
+    persistent and not a shadow error) the failure goes to
+    ``on_give_up(action, job_or_rec, exc)`` if provided — the daemon
+    uses this to log a ``launch_failed`` row and quarantine a node —
+    else it is swallowed with a warning: the decision stream must keep
+    flowing even when the backend cannot keep up.
+    """
+
+    def __init__(self, inner: Launcher, policy: Optional[RetryPolicy] = None,
+                 on_give_up: Optional[Callable[[str, object, Exception],
+                                               None]] = None,
+                 sleep: Callable[[float], None] = time.sleep):
+        self.inner = inner
+        self.policy = policy or RetryPolicy()
+        self.on_give_up = on_give_up
+        self._sleep = sleep
+        self._rng = random.Random(self.policy.seed)
+        self.launch_retries = 0
+        self.launch_failures = 0
+
+    # ------------------------------------------------------------- plumbing
+    def _delay(self, attempt: int) -> float:
+        cap = min(self.policy.max_delay_s,
+                  self.policy.base_delay_s * (2 ** attempt))
+        return self._rng.uniform(0.0, cap) if self.policy.jitter else cap
+
+    def _call(self, action: str, subject, fn, *args) -> None:
+        p = self.policy
+        for attempt in range(1 + p.retries):
+            t0 = time.monotonic()
+            try:
+                fn(*args)
+                return
+            except ShadowLaunchError:
+                raise                     # invariant violation — always fatal
+            except TransientLaunchError as exc:
+                if p.timeout_s is not None and \
+                        time.monotonic() - t0 > p.timeout_s:
+                    err: Exception = TimeoutError(
+                        f"{action} attempt exceeded {p.timeout_s}s "
+                        f"budget ({exc})")
+                else:
+                    err = exc
+                if attempt < p.retries:
+                    self.launch_retries += 1
+                    self._sleep(self._delay(attempt))
+                    continue
+                return self._give_up(action, subject, err)
+            except Exception as exc:      # persistent — no point retrying
+                return self._give_up(action, subject, exc)
+
+    def _give_up(self, action: str, subject, exc: Exception) -> None:
+        self.launch_failures += 1
+        if self.on_give_up is not None:
+            self.on_give_up(action, subject, exc)
+        else:
+            warnings.warn(f"launcher {action} gave up after retries: {exc}",
+                          RuntimeWarning)
+
+    # --------------------------------------------------------------- hooks
+    def start_job(self, job: JobSpec, size: int) -> None:
+        self._call("start", job, self.inner.start_job, job, size)
+
+    def resize(self, job: JobSpec, new_size: int) -> None:
+        self._call("resize", job, self.inner.resize, job, new_size)
+
+    def preempt(self, job: JobSpec) -> None:
+        self._call("preempt", job, self.inner.preempt, job)
+
+    def finish(self, rec: JobRecord) -> None:
+        self._call("finish", rec, self.inner.finish, rec)
+
+    def tick(self) -> None:
+        self.inner.tick()
+
+    def close(self) -> None:
+        self.inner.close()
+
+    @property
+    def counts(self) -> Dict[str, int]:
+        inner = getattr(self.inner, "counts", None)
+        out = dict(inner) if inner is not None else {}
+        out["launch_retries"] = self.launch_retries
+        out["launch_failures"] = self.launch_failures
+        return out
 
 
 class LiveClusterLauncher(Launcher):

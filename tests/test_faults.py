@@ -1,0 +1,333 @@
+"""repro.faults: deterministic node failure/repair injection.
+
+Covers the registry/spec surface, stream determinism, the
+``faults="none"`` bit-for-bit invariance gate, per-job-type fault
+semantics on hand-crafted traces (numbers derived in docs/faults.md),
+fault metrics, ledger invariants, and shadow fidelity under faults.
+"""
+
+import pytest
+
+from repro.core import JobSpec, JobType, SimConfig, Simulator
+from repro.core.metrics import StreamingMetrics, collect, records_sha256
+from repro.core.policy import SchedulerView
+from repro.core.workloads import Scenario, get_scenario
+from repro.faults import (ExpMtbfFaults, FaultEvent, NoFaults, TraceFaults,
+                          UnknownFaultModelError, WeibullFaults,
+                          fault_spec_label, parse_fault_spec,
+                          registered_fault_models, resolve_faults)
+
+
+def _trace(events):
+    return {"model": "trace", "events": events}
+
+
+def _scenario_jobs(n_jobs=40, seed=0):
+    return get_scenario("bursty-od", n_jobs=n_jobs).realize(seed)
+
+
+# ------------------------------------------------------------ registry/spec
+def test_registry_lists_builtin_models():
+    assert {"none", "exp-mtbf", "weibull", "trace"} <= \
+        set(registered_fault_models())
+
+
+def test_parse_compact_spec():
+    assert parse_fault_spec("exp-mtbf:mtbf_h=168,mttr_h=2") == {
+        "model": "exp-mtbf", "mtbf_h": 168, "mttr_h": 2}
+    assert parse_fault_spec("none") == {"model": "none"}
+    with pytest.raises(ValueError):
+        parse_fault_spec("exp-mtbf:mtbf_h168")
+
+
+def test_resolve_accepts_all_forms(tmp_path):
+    assert isinstance(resolve_faults(None), NoFaults)
+    assert isinstance(resolve_faults("none"), NoFaults)
+    m = resolve_faults("exp-mtbf:mtbf_h=100,mttr_h=1")
+    assert isinstance(m, ExpMtbfFaults) and m.mtbf_h == 100.0
+    m2 = resolve_faults({"model": "weibull", "shape": 0.5})
+    assert isinstance(m2, WeibullFaults) and m2.shape == 0.5
+    m3 = resolve_faults(_trace([(5.0, 0, "down"), (9.0, 0, "up")]))
+    assert isinstance(m3, TraceFaults)
+    assert resolve_faults(m3) is m3
+
+
+def test_resolve_rejects_garbage():
+    with pytest.raises(UnknownFaultModelError):
+        resolve_faults("mtbf-exp")
+    with pytest.raises(ValueError):
+        resolve_faults("exp-mtbf:nonsense_param=3")
+    with pytest.raises(ValueError):
+        resolve_faults({"no_model_key": 1})
+    with pytest.raises(ValueError):
+        resolve_faults("exp-mtbf:mtbf_h=-5")
+    with pytest.raises(TypeError):
+        resolve_faults(3.14)
+
+
+def test_fault_spec_label_forms():
+    assert fault_spec_label(None) == "none"
+    assert fault_spec_label("exp-mtbf:mtbf_h=100") == "exp-mtbf:mtbf_h=100"
+    assert fault_spec_label({"model": "weibull", "shape": 0.5}) == \
+        "weibull:shape=0.5"
+
+
+def test_trace_model_file_roundtrip(tmp_path):
+    p = tmp_path / "faults.jsonl"
+    p.write_text('{"t": 5.0, "node": 1, "kind": "down"}\n'
+                 '# comment line\n'
+                 '9.0,1,up\n')
+    evs = TraceFaults(path=str(p)).events(4)
+    assert evs == [FaultEvent(5.0, 1, "down"), FaultEvent(9.0, 1, "up")]
+    with pytest.raises(ValueError):
+        TraceFaults(path=str(p), events=[(1.0, 0, "down")])
+    with pytest.raises(ValueError):
+        TraceFaults(events=[(1.0, 0, "explode")])
+
+
+# ------------------------------------------------------------- determinism
+def test_event_stream_deterministic_and_seed_sensitive():
+    a = ExpMtbfFaults(mtbf_h=50, mttr_h=2, horizon_days=2, seed=7)
+    b = ExpMtbfFaults(mtbf_h=50, mttr_h=2, horizon_days=2, seed=7)
+    c = ExpMtbfFaults(mtbf_h=50, mttr_h=2, horizon_days=2, seed=8)
+    assert a.events(16) == b.events(16)
+    assert a.events(16) != c.events(16)
+    w = WeibullFaults(shape=0.7, scale_h=50, mttr_h=2, horizon_days=2,
+                      seed=7)
+    assert w.events(16) == w.events(16)
+
+
+def test_event_stream_well_formed():
+    evs = ExpMtbfFaults(mtbf_h=20, mttr_h=4, horizon_days=5,
+                        seed=3).events(8)
+    assert evs == sorted(evs)
+    assert all(0.0 < e.t for e in evs)
+    per_node = {}
+    for e in evs:
+        per_node.setdefault(e.node, []).append(e.kind)
+    for kinds in per_node.values():
+        # strict alternation starting at "down" (renewal process)
+        assert kinds == ["down", "up"] * (len(kinds) // 2)
+
+
+def test_node_streams_independent_of_cluster_size():
+    """Node i's personal stream must not change when more nodes exist —
+    the per-node rng keying contract."""
+    small = ExpMtbfFaults(mtbf_h=30, mttr_h=2, horizon_days=5, seed=1)
+    big = ExpMtbfFaults(mtbf_h=30, mttr_h=2, horizon_days=5, seed=1)
+    ev4 = [e for e in small.events(4) if e.node < 4]
+    ev4_of_16 = [e for e in big.events(16) if e.node < 4]
+    assert ev4 == ev4_of_16
+
+
+def test_fault_run_job_for_job_deterministic():
+    jobs, n_nodes = _scenario_jobs(n_jobs=40, seed=2)
+    kw = dict(n_nodes=n_nodes, mechanism="CUA&SPAA",
+              faults="exp-mtbf:mtbf_h=40,mttr_h=2,horizon_days=2")
+    d1 = records_sha256(Simulator(SimConfig(**kw), list(jobs)).run())
+    d2 = records_sha256(Simulator(SimConfig(**kw), list(jobs)).run())
+    assert d1 == d2
+
+
+def test_none_is_bit_for_bit_legacy():
+    """faults="none" / None / omitted must be indistinguishable."""
+    jobs, n_nodes = _scenario_jobs(n_jobs=40, seed=0)
+    base = dict(n_nodes=n_nodes, mechanism="CUP&STEAL")
+    ref = records_sha256(Simulator(SimConfig(**base), list(jobs)).run())
+    for spec in ("none", None):
+        got = records_sha256(
+            Simulator(SimConfig(**base, faults=spec), list(jobs)).run())
+        assert got == ref
+    # and the fault axis actually changes outcomes when enabled
+    faulty = records_sha256(Simulator(
+        SimConfig(**base, faults="exp-mtbf:mtbf_h=40,mttr_h=2,"
+                                 "horizon_days=2"), list(jobs)).run())
+    assert faulty != ref
+
+
+# -------------------------------------------------- per-type fault semantics
+def test_rigid_restarts_from_last_checkpoint():
+    """2-node rigid job, ckpt every 300s; node dies at t=500 (one full
+    checkpoint = 600 node-s protected, 400 node-s lost), repaired at
+    t=600.  Remaining 3400 node-s on 2 nodes => completion 600+1700."""
+    j = JobSpec(jid=0, jtype=JobType.RIGID, project="t", submit_time=0.0,
+                size=2, t_estimate=4000.0, t_actual=2000.0, t_setup=0.0,
+                ckpt_interval=300.0, ckpt_overhead=0.0)
+    cfg = SimConfig(n_nodes=2, mechanism="CUA&SPAA",
+                    faults=_trace([(500.0, 0, "down"), (600.0, 0, "up")]))
+    sim = Simulator(cfg, [j])
+    rec = sim.run()[0]
+    assert not rec.killed
+    assert rec.n_preempted == 1
+    assert rec.completion == pytest.approx(2300.0)
+    m = collect(sim)
+    assert m.n_node_failures == 1
+    assert m.n_interruptions == 1
+    assert m.lost_work_node_h == pytest.approx(400.0 / 3600.0)
+
+
+def test_malleable_shrinks_then_expands_back():
+    """4-node malleable (n_min=2) loses a node at t=200 and keeps
+    running at 3; repair at t=400 expands it back.  Work ledger:
+    200*4 + 200*3 + rest at 4 => completion 1050, no restart."""
+    j = JobSpec(jid=0, jtype=JobType.MALLEABLE, project="t",
+                submit_time=0.0, size=4, t_estimate=3000.0,
+                t_actual=1000.0, t_setup=0.0, n_min=2)
+    cfg = SimConfig(n_nodes=4, mechanism="CUA&SPAA",
+                    faults=_trace([(200.0, 1, "down"), (400.0, 1, "up")]))
+    sim = Simulator(cfg, [j])
+    rec = sim.run()[0]
+    assert not rec.killed
+    assert rec.n_shrunk == 1
+    assert rec.n_preempted == 0       # never vacated, no setup re-paid
+    assert rec.completion == pytest.approx(1050.0)
+
+
+def test_malleable_at_n_min_is_killed_not_shrunk():
+    """At cur_size == n_min the job cannot shed the node: it restarts
+    like a rigid job (malleable checkpoint = all done work)."""
+    j = JobSpec(jid=0, jtype=JobType.MALLEABLE, project="t",
+                submit_time=0.0, size=2, t_estimate=3000.0,
+                t_actual=1000.0, t_setup=0.0, n_min=2)
+    cfg = SimConfig(n_nodes=2, mechanism="CUA&SPAA",
+                    faults=_trace([(200.0, 0, "down"), (300.0, 0, "up")]))
+    sim = Simulator(cfg, [j])
+    rec = sim.run()[0]
+    assert rec.n_preempted == 1
+    assert not rec.killed
+    # malleable ckpt == done work: no work lost, only the outage window
+    assert rec.completion == pytest.approx(1100.0)
+
+
+def test_ondemand_redispatched_with_wait_clock_running():
+    """On-demand job loses a node mid-hold: all progress is lost, the
+    survivor becomes its reservation, and it restarts the full hold when
+    the repair completes the reservation — turnaround measured through
+    the failure."""
+    j = JobSpec(jid=0, jtype=JobType.ONDEMAND, project="od",
+                submit_time=100.0, size=2, t_estimate=300.0,
+                t_actual=300.0)
+    cfg = SimConfig(n_nodes=2, mechanism="CUA&SPAA",
+                    faults=_trace([(200.0, 0, "down"), (250.0, 0, "up")]))
+    sim = Simulator(cfg, [j])
+    rec = sim.run()[0]
+    assert rec.first_start == pytest.approx(100.0)
+    assert rec.n_preempted == 1
+    assert not rec.killed
+    assert rec.completion == pytest.approx(550.0)   # 250 + full 300s hold
+
+
+def test_free_pool_failure_delays_start():
+    """A failure that lands on an idle node starves the queue: a 2-node
+    job cannot start until the repair restores capacity."""
+    j = JobSpec(jid=0, jtype=JobType.RIGID, project="t", submit_time=100.0,
+                size=2, t_estimate=1000.0, t_actual=400.0)
+    cfg = SimConfig(n_nodes=2, mechanism="CUA&SPAA",
+                    faults=_trace([(50.0, 0, "down"), (500.0, 0, "up")]))
+    sim = Simulator(cfg, [j])
+    rec = sim.run()[0]
+    assert rec.first_start == pytest.approx(500.0)
+    assert rec.completion == pytest.approx(900.0)
+
+
+# ------------------------------------------------------- metrics & invariants
+def test_fault_metrics_absent_on_perfect_machine():
+    jobs, n_nodes = _scenario_jobs(n_jobs=20, seed=1)
+    sim = Simulator(SimConfig(n_nodes=n_nodes), list(jobs))
+    sim.run()
+    d = collect(sim).as_dict()
+    for key in ("n_node_failures", "n_interruptions", "lost_work_node_h",
+                "goodput"):
+        assert key not in d
+
+
+def test_fault_metrics_present_and_streaming_agrees():
+    jobs, n_nodes = _scenario_jobs(n_jobs=40, seed=2)
+    spec = "exp-mtbf:mtbf_h=40,mttr_h=2,horizon_days=2"
+    cfg = SimConfig(n_nodes=n_nodes, faults=spec)
+    sim = Simulator(cfg, list(jobs))
+    sim.run()
+    m = collect(sim)
+    assert m.n_node_failures > 0
+    assert m.goodput == m.goodput        # not NaN
+    assert 0.0 < m.goodput <= 1.0
+
+    sm = StreamingMetrics()
+    sim2 = Simulator(SimConfig(n_nodes=n_nodes, faults=spec), list(jobs),
+                     record_sink=sm)
+    sim2.run()
+    m2 = sm.result(sim2)
+    assert m2.goodput == pytest.approx(m.goodput, abs=1e-12)
+    assert m2.lost_work_node_h == pytest.approx(m.lost_work_node_h)
+    assert m2.n_interruptions == m.n_interruptions
+
+
+def test_ledger_balanced_after_all_repairs():
+    jobs, n_nodes = _scenario_jobs(n_jobs=30, seed=3)
+    sim = Simulator(SimConfig(
+        n_nodes=n_nodes,
+        faults="exp-mtbf:mtbf_h=40,mttr_h=1,horizon_days=2"), list(jobs))
+    sim.run()
+    assert sim.fault_downs > 0
+    assert sim.fault_ups == sim.fault_downs    # every outage repaired
+    sim.ledger.check()
+    assert sim.ledger.down == 0
+    assert sim.ledger.free + sim.ledger.occupied <= sim.cfg.n_nodes
+
+
+def test_view_exposes_fault_state():
+    j = JobSpec(jid=0, jtype=JobType.RIGID, project="t", submit_time=0.0,
+                size=1, t_estimate=5000.0, t_actual=4000.0)
+    cfg = SimConfig(n_nodes=4, mechanism="CUA&SPAA",
+                    faults=_trace([(100.0, 2, "down"), (900.0, 2, "up")]))
+    sim = Simulator(cfg, [j])
+    view = SchedulerView(sim)
+    assert view.fault_model == "trace"
+    sim.step_until(500.0)
+    assert view.down == 1
+    sim.step_until(1000.0)
+    assert view.down == 0
+    assert view.draining == 0
+
+    sim_plain = Simulator(SimConfig(n_nodes=4), [
+        JobSpec(jid=0, jtype=JobType.RIGID, project="t", submit_time=0.0,
+                size=1, t_estimate=100.0, t_actual=50.0)])
+    v = SchedulerView(sim_plain)
+    assert v.fault_model == "none" and v.down == 0 and v.draining == 0
+
+
+# ------------------------------------------------------- scenario/experiment
+def test_scenario_validates_fault_spec():
+    sc = get_scenario("bursty-od", n_jobs=10)
+    ok = Scenario(**{**sc.__dict__, "faults": "exp-mtbf:mtbf_h=100"})
+    ok.validate()
+    bad = Scenario(**{**sc.__dict__, "faults": "not-a-model"})
+    with pytest.raises(UnknownFaultModelError):
+        bad.validate()
+
+
+def test_shadow_fidelity_holds_under_faults():
+    from repro.service import ServiceConfig, shadow_fidelity
+    jobs, n_nodes = _scenario_jobs(n_jobs=40, seed=3)
+    for mech in ("CUA&SPAA", "CUP&STEAL"):
+        cfg = ServiceConfig(
+            n_nodes=n_nodes, mechanism=mech,
+            sim_overrides={"faults":
+                           "exp-mtbf:mtbf_h=40,mttr_h=2,horizon_days=2"})
+        fr = shadow_fidelity(list(jobs), cfg)
+        assert fr.ok, (mech, fr.mismatched_jids)
+
+
+def test_service_core_narrates_fault_events():
+    from repro.service import NullLauncher, ServiceConfig, ServiceCore
+    jobs, n_nodes = _scenario_jobs(n_jobs=40, seed=3)
+    cfg = ServiceConfig(
+        n_nodes=n_nodes,
+        sim_overrides={"faults":
+                       "exp-mtbf:mtbf_h=40,mttr_h=2,horizon_days=2"})
+    core = ServiceCore(cfg.sim_config(), list(jobs), launcher=NullLauncher())
+    core.run()
+    events = {r["event"] for r in core.drain_decisions()}
+    assert "node_down" in events and "node_up" in events
+
+

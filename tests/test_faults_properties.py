@@ -1,0 +1,53 @@
+"""Property-based fault-model invariants (hypothesis).
+
+Guarded by importorskip like tests/test_properties.py: hypothesis ships
+via requirements-dev.txt and may be absent from minimal environments —
+the deterministic fault tests in tests/test_faults.py still run there.
+"""
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import SimConfig, Simulator
+from repro.core.metrics import records_sha256
+from repro.core.workloads import get_scenario
+from repro.faults import ExpMtbfFaults, WeibullFaults
+
+
+@settings(max_examples=25, deadline=None)
+@given(mtbf_h=st.floats(5.0, 500.0), mttr_h=st.floats(0.1, 24.0),
+       seed=st.integers(0, 2**31 - 1), n_nodes=st.integers(1, 32))
+def test_stream_deterministic_and_sorted(mtbf_h, mttr_h, seed, n_nodes):
+    m = ExpMtbfFaults(mtbf_h=mtbf_h, mttr_h=mttr_h, horizon_days=3.0,
+                      seed=seed)
+    evs = m.events(n_nodes)
+    assert evs == m.events(n_nodes)       # pure function of the params
+    assert evs == sorted(evs)
+    horizon = 3.0 * 86400.0
+    assert all(e.t < horizon for e in evs if e.kind == "down")
+
+
+@settings(max_examples=15, deadline=None)
+@given(shape=st.floats(0.3, 3.0), seed=st.integers(0, 2**31 - 1))
+def test_weibull_alternates_per_node(shape, seed):
+    evs = WeibullFaults(shape=shape, scale_h=30.0, mttr_h=2.0,
+                        horizon_days=3.0, seed=seed).events(8)
+    per_node = {}
+    for e in evs:
+        per_node.setdefault(e.node, []).append(e.kind)
+    for kinds in per_node.values():
+        assert kinds == ["down", "up"] * (len(kinds) // 2)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_none_digest_invariant(seed):
+    jobs, n_nodes = get_scenario("bursty-od", n_jobs=12).realize(seed % 5)
+    base = dict(n_nodes=n_nodes, mechanism="CUA&SPAA")
+    ref = records_sha256(Simulator(SimConfig(**base), list(jobs)).run())
+    got = records_sha256(Simulator(
+        SimConfig(**base, faults="none"), list(jobs)).run())
+    assert got == ref

@@ -1,0 +1,404 @@
+"""Crash-recoverable service: rotation, torn tails, SIGKILL recovery,
+retrying launchers, quarantine, and admission backpressure.
+
+The headline gate: SIGKILL a live daemon mid-replay, recover from its
+(rotated, possibly torn) on-disk decision log, finish the run, and the
+concatenated decision stream must be sha256-identical to an
+uninterrupted run — across mechanisms.
+"""
+import json
+import os
+import signal
+import subprocess
+import sys
+import threading
+import time
+
+import pytest
+
+import repro.core
+from repro.core import SimConfig
+from repro.core.workloads import get_scenario
+from repro.service import (AdmissionQueue, AdmissionRejected, DecisionLog,
+                           DryrunLauncher, RetryPolicy, RetryingLauncher,
+                           SchedulerService, ServiceConfig, ServiceCore,
+                           ShadowLaunchError, TornLogError,
+                           TransientLaunchError, decision_digest,
+                           log_segments, read_decision_log)
+
+SRC_DIR = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(repro.core.__file__))))
+
+
+def _jobs(n_jobs=40, seed=3):
+    return get_scenario("bursty-od", n_jobs=n_jobs).realize(seed)
+
+
+def _reference_digest(jobs, n_nodes, mechanism):
+    """One uninterrupted in-memory run — the digest every crashed-and-
+    recovered variant must reproduce."""
+    svc = SchedulerService(
+        ServiceConfig(n_nodes=n_nodes, mechanism=mechanism), list(jobs))
+    return svc.run_replay().digest
+
+
+# --------------------------------------------------------------- rotation
+def test_rotation_produces_segments_and_roundtrips(tmp_path):
+    jobs, n_nodes = _jobs()
+    path = str(tmp_path / "log.jsonl")
+    cfg = ServiceConfig(n_nodes=n_nodes, decision_log_path=path,
+                        log_rotate_bytes=2048)
+    svc = SchedulerService(cfg, list(jobs))
+    rep = svc.run_replay()
+    segs = log_segments(path)
+    assert len(segs) > 2                     # actually rotated
+    assert segs[-1] == path                  # active file is last
+    for seg in segs[:-1]:
+        assert os.path.getsize(seg) >= 2048  # rotated past the threshold
+    rows = read_decision_log(path)
+    assert len(rows) == rep.n_decisions
+    assert decision_digest(rows) == rep.digest
+
+
+# -------------------------------------------------------------- torn tails
+def test_torn_final_line_skipped_with_warning(tmp_path):
+    path = str(tmp_path / "log.jsonl")
+    with DecisionLog(path) as log:
+        log.append({"seq": 0, "event": "start", "jid": 1, "t_sim": 0.0})
+        log.append({"seq": 1, "event": "end", "jid": 1, "t_sim": 5.0})
+    with open(path, "a") as fh:
+        fh.write('{"seq": 2, "event": "sta')     # crash mid-write
+    with pytest.warns(RuntimeWarning, match="torn final line"):
+        rows = read_decision_log(path)
+    assert [r["seq"] for r in rows] == [0, 1]
+
+
+def test_midfile_corruption_raises(tmp_path):
+    path = str(tmp_path / "log.jsonl")
+    good = json.dumps({"seq": 0, "event": "start", "jid": 1})
+    with open(path, "w") as fh:
+        fh.write(good + "\n")
+        fh.write("NOT JSON AT ALL\n")            # corruption *with* newline
+        fh.write(good + "\n")
+    with pytest.raises(TornLogError, match="corrupt row"):
+        read_decision_log(path)
+
+
+def test_recover_truncates_torn_tail_and_appends(tmp_path):
+    path = str(tmp_path / "log.jsonl")
+    with DecisionLog(path) as log:
+        log.append({"seq": 0, "event": "start", "jid": 1, "t_sim": 0.0})
+    size_clean = os.path.getsize(path)
+    with open(path, "a") as fh:
+        fh.write('{"torn')
+    with pytest.warns(RuntimeWarning):
+        log2, rows = DecisionLog.recover(path)
+    assert os.path.getsize(path) == size_clean   # tail physically removed
+    assert len(rows) == 1 and log2.n_rows == 1
+    log2.append({"seq": 1, "event": "end", "jid": 1, "t_sim": 5.0})
+    log2.close()
+    rows = read_decision_log(path)
+    assert [r["seq"] for r in rows] == [0, 1]
+    # digest continuity: recovered-prefix + appended == fresh full log
+    ref = DecisionLog()
+    ref.append({"seq": 0, "event": "start", "jid": 1, "t_sim": 0.0})
+    ref.append({"seq": 1, "event": "end", "jid": 1, "t_sim": 5.0})
+    assert log2.digest == ref.digest
+
+
+def test_recover_reads_rotated_segments_in_order(tmp_path):
+    path = str(tmp_path / "log.jsonl")
+    with DecisionLog(path, rotate_bytes=200) as log:
+        for i in range(20):
+            log.append({"seq": i, "event": "start", "jid": i, "t_sim": 0.0})
+    assert len(log_segments(path)) > 1
+    _, rows = DecisionLog.recover(path)
+    assert [r["seq"] for r in rows] == list(range(20))
+
+
+# ----------------------------------------------------- SIGKILL + recovery
+_CHILD = """
+import os, signal, sys
+from repro.core.workloads import get_scenario
+from repro.service import SchedulerService, ServiceConfig
+
+path, mech, k = sys.argv[1], sys.argv[2], int(sys.argv[3])
+jobs, n_nodes = get_scenario("bursty-od", n_jobs=40).realize(3)
+cfg = ServiceConfig(n_nodes=n_nodes, mechanism=mech,
+                    decision_log_path=path, log_rotate_bytes=2048)
+svc = SchedulerService(cfg, list(jobs))
+orig = svc.log.append
+state = {"n": 0}
+def killing_append(row, **kw):
+    out = orig(row, **kw)
+    state["n"] += 1
+    if state["n"] >= k:
+        os.kill(os.getpid(), signal.SIGKILL)   # no atexit, no flush, no mercy
+    return out
+svc.log.append = killing_append
+svc.run_replay()
+raise SystemExit("unreachable: child should have been SIGKILLed")
+"""
+
+
+@pytest.mark.parametrize("mechanism", ["CUA&SPAA", "CUP&STEAL"])
+def test_sigkill_then_recover_digest_identical(tmp_path, mechanism):
+    """Kill a real daemon process after K logged decisions; recover in
+    this process; the finished stream must be sha256-identical to an
+    uninterrupted run."""
+    jobs, n_nodes = _jobs()
+    path = str(tmp_path / "log.jsonl")
+    child = tmp_path / "child.py"
+    child.write_text(_CHILD)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC_DIR + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, str(child), path, mechanism, "25"],
+                          env=env, capture_output=True, timeout=120)
+    assert proc.returncode == -signal.SIGKILL, proc.stderr.decode()
+
+    cfg = ServiceConfig(n_nodes=n_nodes, mechanism=mechanism,
+                        decision_log_path=path, log_rotate_bytes=2048)
+    svc, rr = SchedulerService.recover(cfg, list(jobs))
+    assert rr.ok and rr.digests_match
+    assert rr.n_decisions_recovered >= 25
+    rep = svc.run_replay()
+
+    ref = _reference_digest(jobs, n_nodes, mechanism)
+    assert rep.digest == ref
+    # and the on-disk stream (rotated segments concatenated) agrees
+    assert decision_digest(read_decision_log(path)) == ref
+
+
+def test_recover_in_process_after_abandoned_partial_run(tmp_path):
+    """The same contract without a subprocess: abandon a half-replayed
+    service (simulated crash), recover, finish, compare digests."""
+    jobs, n_nodes = _jobs()
+    path = str(tmp_path / "log.jsonl")
+    cfg = ServiceConfig(n_nodes=n_nodes, decision_log_path=path,
+                        log_rotate_bytes=1024)
+    crashed = SchedulerService(cfg, list(jobs))
+    while crashed.core.n_decisions < 40:
+        t = crashed.core.next_event_time()
+        if t is None:
+            break
+        crashed._step_batch(t)
+    # walk away: no close(), no finalize — the open handle just drops
+
+    svc, rr = SchedulerService.recover(cfg, list(jobs))
+    assert rr.ok
+    assert rr.resumed_at > 0.0
+    rep = svc.run_replay()
+    assert rep.digest == _reference_digest(jobs, n_nodes, cfg.mechanism)
+
+
+def test_recover_requires_log_path():
+    with pytest.raises(ValueError, match="decision_log_path"):
+        SchedulerService.recover(ServiceConfig(n_nodes=8), [])
+
+
+# -------------------------------------------------------- retrying launcher
+class _FlakyLauncher(DryrunLauncher):
+    """Fails the first `fail_first` start attempts transiently."""
+
+    def __init__(self, n_nodes, fail_first):
+        super().__init__(n_nodes)
+        self.fails = fail_first
+
+    def start_job(self, job, size):
+        if self.fails > 0:
+            self.fails -= 1
+            raise TransientLaunchError("network blip")
+        super().start_job(job, size)
+
+
+def test_retry_recovers_transient_failures_and_digest_unchanged():
+    jobs, n_nodes = _jobs()
+    naps = []
+    rl = RetryingLauncher(_FlakyLauncher(n_nodes, fail_first=3),
+                          RetryPolicy(retries=3, seed=1), sleep=naps.append)
+    svc = SchedulerService(ServiceConfig(n_nodes=n_nodes), list(jobs),
+                           launcher=rl)
+    rep = svc.run_replay()
+    assert rep.digest == _reference_digest(jobs, n_nodes, "CUA&SPAA")
+    assert rl.counts["launch_retries"] == 3
+    assert rl.counts["launch_failures"] == 0
+    assert len(naps) == 3 and all(d >= 0.0 for d in naps)
+    assert rep.launcher_counts["launch_retries"] == 3
+
+
+def test_retry_backoff_grows_and_is_seeded():
+    def delays(seed):
+        out = []
+        rl = RetryingLauncher(DryrunLauncher(4),
+                              RetryPolicy(retries=5, base_delay_s=0.1,
+                                          max_delay_s=100.0, seed=seed),
+                              sleep=out.append)
+        for attempt in range(5):
+            out.append(rl._delay(attempt))
+        return out
+    assert delays(7) == delays(7)            # deterministic per seed
+    assert delays(7) != delays(8)
+    caps = [0.1 * 2 ** i for i in range(5)]
+    for d, cap in zip(delays(7), caps):
+        assert 0.0 <= d <= cap               # full jitter stays under cap
+
+
+def test_persistent_failure_goes_to_give_up_callback():
+    class Broken(DryrunLauncher):
+        def start_job(self, job, size):
+            raise RuntimeError("bad node")
+    seen = []
+    rl = RetryingLauncher(Broken(8), RetryPolicy(retries=2),
+                          on_give_up=lambda a, s, e: seen.append((a, str(e))),
+                          sleep=lambda s: None)
+    jobs, _ = _jobs(n_jobs=10)
+    rl.start_job(jobs[0], 2)
+    assert seen == [("start", "bad node")]   # persistent => no retries spent
+    assert rl.launch_retries == 0
+    assert rl.launch_failures == 1
+
+
+def test_shadow_launch_error_stays_fatal():
+    rl = RetryingLauncher(DryrunLauncher(4), RetryPolicy(retries=5),
+                          sleep=lambda s: None)
+    jobs, _ = _jobs(n_jobs=10)
+    rl.start_job(jobs[0], 2)
+    with pytest.raises(ShadowLaunchError):
+        rl.start_job(jobs[0], 2)             # double start = invariant broken
+
+
+def test_give_up_without_callback_warns_not_raises():
+    class Broken(DryrunLauncher):
+        def start_job(self, job, size):
+            raise RuntimeError("bad node")
+    rl = RetryingLauncher(Broken(8), RetryPolicy(retries=0),
+                          sleep=lambda s: None)
+    jobs, _ = _jobs(n_jobs=10)
+    with pytest.warns(RuntimeWarning, match="gave up"):
+        rl.start_job(jobs[0], 2)
+
+
+# ---------------------------------------------------- quarantine wiring
+def test_launch_failures_quarantine_nodes_and_are_digest_exempt():
+    """A permanently failing backend: the replay still completes, every
+    give-up is logged as a seq=-1 launch_failed row, and nodes drain."""
+    class Broken(DryrunLauncher):
+        def start_job(self, job, size):
+            raise RuntimeError("bad node")
+
+        def preempt(self, job):
+            pass
+
+        def resize(self, job, new_size):
+            pass
+
+        def finish(self, rec):
+            pass
+
+        def close(self):
+            pass
+
+    jobs, n_nodes = _jobs()
+    rl = RetryingLauncher(Broken(n_nodes), RetryPolicy(retries=1),
+                          sleep=lambda s: None)
+    svc = SchedulerService(ServiceConfig(n_nodes=n_nodes), list(jobs),
+                           launcher=rl)
+    rep = svc.run_replay()
+    lf = [r for r in svc.log.rows if r["event"] == "launch_failed"]
+    q = [r for r in svc.log.rows if r["event"] == "quarantine"]
+    assert lf and q
+    assert all(r["seq"] == -1 for r in lf + q)
+    assert svc.core.ledger.draining > 0
+    assert svc.core.n_quarantined == len(q)
+    # runtime rows never enter the digest: recompute over decision rows
+    assert decision_digest(svc.log.rows) == rep.digest
+
+
+def test_quarantine_waits_for_free_nodes():
+    jobs, _ = _jobs(n_jobs=6)
+    core = ServiceCore(SimConfig(n_nodes=4), jobs)
+    core.quarantine(2)
+    core.run()
+    assert core.ledger.draining == 2
+    assert core.n_quarantined == 2
+    core.ledger.check()
+
+
+# ------------------------------------------------- admission backpressure
+def test_admission_rejects_bad_config():
+    with pytest.raises(ValueError, match="backpressure"):
+        AdmissionQueue(backpressure="drop-everything")
+    with pytest.raises(ValueError, match="maxsize"):
+        AdmissionQueue(maxsize=0)
+
+
+def test_shed_oldest_inference_spares_training():
+    aq = AdmissionQueue(maxsize=3, backpressure="shed-oldest-inference")
+    first = aq.submit_inference(2, 60.0)
+    aq.submit_training(4, 100.0)
+    aq.submit_inference(2, 60.0, submit_time=1.0)
+    aq.submit_inference(2, 60.0, submit_time=2.0)   # full: sheds `first`
+    assert aq.counts == {"submitted": 4, "shed": 1, "rejected": 0,
+                         "blocked": 0}
+    drained = aq.drain()
+    assert first not in drained
+    assert len(drained) == 3
+
+
+def test_shed_policy_rejects_when_nothing_sheddable():
+    aq = AdmissionQueue(maxsize=1, backpressure="shed-oldest-inference")
+    aq.submit_training(4, 100.0)
+    with pytest.raises(AdmissionRejected):
+        aq.submit_training(4, 100.0)        # training is never shed
+    assert aq.counts["rejected"] == 1
+
+
+def test_reject_policy_raises_at_capacity():
+    aq = AdmissionQueue(maxsize=2, backpressure="reject")
+    aq.submit_rigid(2, 50.0)
+    aq.submit_rigid(2, 50.0)
+    with pytest.raises(AdmissionRejected):
+        aq.submit_rigid(2, 50.0)
+    assert aq.counts == {"submitted": 2, "shed": 0, "rejected": 1,
+                         "blocked": 0}
+
+
+def test_block_policy_waits_for_drain():
+    aq = AdmissionQueue(maxsize=1, backpressure="block")
+    aq.submit_rigid(2, 50.0)
+    unblocked = threading.Event()
+
+    def producer():
+        aq.submit_rigid(2, 60.0)            # blocks until the drain below
+        unblocked.set()
+
+    th = threading.Thread(target=producer, daemon=True)
+    th.start()
+    time.sleep(0.05)
+    assert not unblocked.is_set()           # genuinely waiting
+    assert len(aq.drain()) == 1
+    assert unblocked.wait(2.0)
+    th.join(2.0)
+    assert aq.counts["blocked"] == 1 and aq.counts["submitted"] == 2
+    assert len(aq) == 1
+
+
+def test_block_policy_timeout_rejects():
+    aq = AdmissionQueue(maxsize=1, backpressure="block")
+    spec = aq.submit_rigid(2, 50.0)
+    with pytest.raises(AdmissionRejected):
+        aq.put(spec, timeout=0.05)
+    assert aq.counts["rejected"] == 1
+
+
+def test_live_report_carries_admission_counts():
+    jobs, n_nodes = _jobs(n_jobs=0)
+    aq = AdmissionQueue(maxsize=64)
+    svc = SchedulerService(ServiceConfig(n_nodes=16, speed=1e6), [])
+    aq.submit_rigid(2, 50.0)
+    aq.submit_training(4, 100.0, submit_time=10.0)
+    aq.close()
+    rep = svc.run_live(aq)
+    assert rep.admission_counts is not None
+    assert rep.admission_counts["submitted"] == 2
+    assert rep.n_jobs == 2
