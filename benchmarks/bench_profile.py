@@ -1,0 +1,83 @@
+"""cProfile the replay hot loop: the top-frame table behind the PR-9
+optimizations (prebound handler dispatch, debug-gated ledger.check,
+unrolled P2Quantile.add).
+
+One profiled month-dense replay (the scheduling-bound regime) under
+cProfile, then the top frames by total time as rows — committed to
+results/bench/profile.json and uploaded as a CI artifact so a future
+"why is the engine slow" question starts from data, not guesses.
+
+cProfile's tracing overhead inflates absolute times ~2x; the table is
+for *ranking* frames, not for wall-clock claims (those live in
+scale.json).  The summary row therefore also reports the untraced wall
+clock of the same replay.
+"""
+from __future__ import annotations
+
+import cProfile
+import os
+import pstats
+import time
+from typing import List
+
+from repro.core import SimConfig, Simulator, WorkloadConfig, generate
+
+N_NODES = 4392  # Theta
+
+
+def bench_profile(n_jobs: int = 6000, horizon_days: float = 30.0,
+                  mechanism: str = "CUA&SPAA", seed: int = 0,
+                  batch_rounds: float = 0.0, top_n: int = 12) -> List[dict]:
+    """Profile one replay; return the top-``top_n`` frames by tottime.
+
+    ``batch_rounds=0`` profiles the per-event engine (the default and
+    the worst case — every event can trigger a scheduling pass); pass a
+    round length to see where the time goes once passes are batched.
+    """
+    wl = WorkloadConfig(n_nodes=N_NODES, n_jobs=n_jobs,
+                        horizon_days=horizon_days, target_load=1.15,
+                        notice_mix="W5", seed=seed)
+    jobs = generate(wl)
+    cfg = SimConfig(n_nodes=N_NODES, mechanism=mechanism,
+                    batch_rounds=batch_rounds)
+
+    # untraced reference wall clock first (cProfile inflates ~2x)
+    ref = Simulator(cfg, list(jobs))
+    t0 = time.perf_counter()
+    ref.run()
+    wall_s = time.perf_counter() - t0
+
+    sim = Simulator(cfg, list(jobs))
+    prof = cProfile.Profile()
+    prof.enable()
+    sim.run()
+    prof.disable()
+
+    st = pstats.Stats(prof)
+    total_tt = sum(rec[2] for rec in st.stats.values())
+    frames = sorted(st.stats.items(), key=lambda kv: kv[1][2], reverse=True)
+
+    rows = [{"name": f"profile_{n_jobs}job_{horizon_days:g}d_b"
+                     f"{batch_rounds:g}",
+             "n_jobs": n_jobs, "horizon_days": horizon_days,
+             "mechanism": mechanism, "seed": seed,
+             "batch_rounds": batch_rounds,
+             "seconds": round(wall_s, 3),
+             "profiled_seconds": round(total_tt, 3),
+             "derived": (f"untraced {wall_s:.2f}s, traced {total_tt:.2f}s; "
+                         f"top {top_n} frames follow")}]
+    for rank, ((fname, lineno, func), (cc, nc, tt, ct, _callers)) \
+            in enumerate(frames[:top_n], start=1):
+        where = (f"{os.path.basename(fname)}:{lineno}:{func}"
+                 if fname not in ("~", "") else func)  # "~" = builtins
+        rows.append({
+            "name": f"profile_frame_{rank:02d}",
+            "frame": where,
+            "ncalls": nc,
+            "tottime_s": round(tt, 3),
+            "cumtime_s": round(ct, 3),
+            "tottime_pct": round(tt / total_tt * 100.0, 1),
+            "us_per_call": round(tt / max(nc, 1) * 1e6, 2),
+            "derived": (f"{where} {tt:.2f}s ({tt / total_tt * 100.0:.1f}%) "
+                        f"over {nc} calls")})
+    return rows

@@ -11,10 +11,15 @@ writes the full row dicts to results/bench/*.json.  Sections:
   scenarios   scenario presets x mechanisms         (docs/workloads.md)
   obs10       decision latency                      (paper Obs 10)
   dispatch    policy-API overhead vs seed           (BENCH_scheduler.json)
+  profile     cProfile top-frame table of the      (results/bench/
+              month-dense replay hot loop           profile.json; CI artifact)
   scale       engine wall clock 600 -> 6k -> 50k,   (results/bench/scale.json
               streaming==materialized sha gates,     + BENCH_scheduler.json)
-              and the full-year streaming rung
-              with per-mode peak RSS
+              the batch-rounds fidelity-vs-speed
+              curve (+ digest gate at rounds=0),
+              the 1M-job multi-year rung, and the
+              full-year streaming rung with
+              per-mode peak RSS
   service     shadow scheduler service replay:      (results/bench/
               fidelity digest vs offline simulator   service.json;
               + decision-latency SLO gates           docs/service.md)
@@ -30,9 +35,11 @@ Scale tiers: --quick runs (600, 2k) with the paired pre-PR baseline at
 600 jobs; the default adds the 6k steady-load and month-dense pairs
 (the latter gates the >= 10x speedup acceptance); --full adds the
 50k-job Theta-scale sweep.  Every mode appends the streaming-identity
-sha rows and a full-year streaming replay (benchmarks/bench_scale: 110k
-jobs/365d, or a density-preserving 20k "quick year" under --quick) with
-per-mode peak RSS.
+sha rows, the batch-rounds fidelity curve (--quick probes a single
+round size on the small tier; other modes run the full curve plus the
+1M-job multi-year rung) and a full-year streaming replay
+(benchmarks/bench_scale: 110k jobs/365d, or a density-preserving 20k
+"quick year" under --quick) with per-mode peak RSS.
 """
 from __future__ import annotations
 
@@ -43,8 +50,8 @@ import subprocess
 import sys
 import time
 
-from . import (bench_campaign, bench_decision, bench_faults, bench_roofline,
-               bench_scale, bench_scheduler, bench_service)
+from . import (bench_campaign, bench_decision, bench_faults, bench_profile,
+               bench_roofline, bench_scale, bench_scheduler, bench_service)
 
 OUT = "results/bench"
 
@@ -163,6 +170,15 @@ def main(argv=None) -> int:
                     f"> budget {row['budget_pct']:.0f}%")
             print(f"VALIDATION-FAIL,{fail}", file=sys.stderr)
             failures.append(fail)
+    if want("profile"):
+        t0 = time.perf_counter()
+        # quick profiles a smaller month-dense slice; ranking is what
+        # matters and it is stable across the scale-down
+        rows = bench_profile.bench_profile(
+            n_jobs=1500 if args.quick else 6000,
+            horizon_days=7.5 if args.quick else 30.0)
+        _emit("profile", rows, t0, dict(prov, seeds=[0],
+                                        n_jobs=rows[0]["n_jobs"]))
     if want("scale"):
         t0 = time.perf_counter()
         if args.quick:
@@ -182,6 +198,18 @@ def main(argv=None) -> int:
         identity_tiers = ((600, 21.0),) if args.quick \
             else ((600, 21.0), (6000, 210.0))
         rows += bench_scale.bench_stream_identity(tiers=identity_tiers)
+        # batch-rounds fidelity-vs-speed curve (quick: one round size on
+        # the small tier — digest + drift gates only; else the full
+        # >= 5-point curve on the month-dense scheduling-bound tier)
+        if args.quick:
+            batch_rows = bench_scale.bench_batch_fidelity(
+                n_jobs=600, horizon_days=21.0, round_sizes=(0.0, 900.0),
+                repeats=1)
+        else:
+            batch_rows = bench_scale.bench_batch_fidelity()
+        rows += batch_rows
+        if not args.quick:
+            rows += bench_scale.bench_million()
         rows += bench_scale.bench_full_year(
             n_jobs=20_000 if args.quick else bench_scale.YEAR_N_JOBS)
         _emit("scale", rows, t0,
@@ -212,13 +240,41 @@ def main(argv=None) -> int:
                 print(f"VALIDATION-FAIL,{fail}", file=sys.stderr)
                 failures.append(fail)
             # the acceptance gate: month-dense 6k replay >= 10x
-            if "speedup" in r and r["n_jobs"] >= 6000 \
+            if r["name"].startswith("scale_") and "speedup" in r \
+                    and r["n_jobs"] >= 6000 \
                     and r["horizon_days"] <= 31.0 \
                     and r["speedup"] < bench_scheduler.SCALE_SPEEDUP_TARGET:
                 fail = (f"scale: {r['name']} speedup {r['speedup']}x < "
                         f"{bench_scheduler.SCALE_SPEEDUP_TARGET}x target")
                 print(f"VALIDATION-FAIL,{fail}", file=sys.stderr)
                 failures.append(fail)
+        # batch-rounds gates: the rounds=0 digest gate rides the
+        # records_match loop above; here the fidelity/speed acceptance
+        curve = [r for r in batch_rows if r["batch_rounds"] > 0]
+        drifted = [r for r in curve
+                   if abs(r["od_drift_pct"]) > bench_scale.BATCH_OD_DRIFT_PCT]
+        if args.quick:
+            # CI smoke: bounded od drift at the single probed round size
+            for r in drifted:
+                fail = (f"scale: {r['name']} od drift "
+                        f"{r['od_drift_pct']:+.2f}% > "
+                        f"{bench_scale.BATCH_OD_DRIFT_PCT:.0f}% bound")
+                print(f"VALIDATION-FAIL,{fail}", file=sys.stderr)
+                failures.append(fail)
+        elif any("speedup" in r for r in curve) and not any(
+                r.get("speedup", 0.0) >= bench_scale.BATCH_SPEEDUP_TARGET
+                and abs(r["od_drift_pct"])
+                <= bench_scale.BATCH_OD_DRIFT_PCT for r in curve):
+            # "speedup" is the scale_* rows' convention: measured vs the
+            # pre-PR engine (hot loop + batching combined).  Like the
+            # >= 10x scale gate, this one can only run where git history
+            # is available to rebuild that baseline.
+            fail = (f"scale: no batch round size reaches "
+                    f"{bench_scale.BATCH_SPEEDUP_TARGET:.0f}x speedup "
+                    f"(vs pre-engine) at "
+                    f"<= {bench_scale.BATCH_OD_DRIFT_PCT:.0f}% od drift")
+            print(f"VALIDATION-FAIL,{fail}", file=sys.stderr)
+            failures.append(fail)
     if want("service"):
         t0 = time.perf_counter()
         svc_cells = bench_service.CELLS[:1] if args.quick \

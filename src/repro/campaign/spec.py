@@ -50,7 +50,12 @@ from .zoo import get_trace
 #: validators (value -> error string or None).  ``faults`` values are
 #: compact repro.faults spec strings ("none", "exp-mtbf:mtbf_h=168");
 #: they thread into Scenario.faults -> SimConfig.faults per cell.
-GRID_AXES = ("target_load", "malleable_frac", "od_frac", "notice", "faults")
+#: ``batch_rounds`` values are scheduling-round intervals in seconds
+#: (0 = per-event engine); they thread into Scenario.batch_rounds ->
+#: SimConfig.batch_rounds per cell, so one campaign can sweep the
+#: fidelity-vs-speed knob alongside the regime axes.
+GRID_AXES = ("target_load", "malleable_frac", "od_frac", "notice", "faults",
+             "batch_rounds")
 
 
 class CampaignSpecError(ValueError):
@@ -251,6 +256,11 @@ class CampaignSpec:
                     scenario = replace(
                         scenario, faults=faults,
                         name=f"{scenario.label}/f:{faults}")
+                batch = point["batch_rounds"]
+                if batch is not None:
+                    scenario = replace(
+                        scenario, batch_rounds=float(batch),
+                        name=f"{scenario.label}/b:{batch:g}")
                 out.append((regime, scenario))
         return out
 
@@ -321,6 +331,8 @@ def _validate_axis(axis: str, v: object) -> Optional[str]:
         return f"target_load {v} outside (0, 2]"
     if axis in ("malleable_frac", "od_frac") and not 0.0 <= v <= 1.0:
         return f"{axis} {v} outside [0, 1]"
+    if axis == "batch_rounds" and v < 0:
+        return f"batch_rounds {v} must be >= 0 seconds"
     return None
 
 

@@ -109,12 +109,16 @@ class RunResult:
 
 
 def _sim_kw(spec: RunSpec) -> dict:
-    """RunSpec sim overrides + the scenario's fault axis (an explicit
-    sim_kw["faults"] wins over the Scenario field)."""
+    """RunSpec sim overrides + the scenario's per-cell SimConfig axes
+    (fault spec, batch-round interval); an explicit sim_kw entry wins
+    over the Scenario field."""
     kw = dict(spec.sim_kw)
     faults = getattr(spec.workload, "faults", None)
     if faults is not None and "faults" not in kw:
         kw["faults"] = faults
+    batch = getattr(spec.workload, "batch_rounds", None)
+    if batch is not None and "batch_rounds" not in kw:
+        kw["batch_rounds"] = batch
     return kw
 
 

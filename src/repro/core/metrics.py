@@ -139,95 +139,27 @@ def summarize_records(records: Mapping[int, JobRecord],
 
 
 # ---------------------------------------------------- incremental primitives
-class Welford:
-    """Numerically stable streaming mean/variance (Welford 1962)."""
-
-    __slots__ = ("n", "mean", "_m2")
-
-    def __init__(self) -> None:
-        self.n = 0
-        self.mean = 0.0
-        self._m2 = 0.0
-
-    def add(self, x: float) -> None:
-        self.n += 1
-        delta = x - self.mean
-        self.mean += delta / self.n
-        self._m2 += delta * (x - self.mean)
-
-    @property
-    def variance(self) -> float:
-        return self._m2 / self.n if self.n else float("nan")
-
-    def result(self) -> float:
-        return self.mean if self.n else float("nan")
+# Welford and P2Quantile live in repro.core.sketches (the simulator holds
+# a sketch for its streaming decision-latency p99, and metrics imports the
+# simulator — the sketches must sit below both); re-exported here so
+# existing ``from repro.core.metrics import P2Quantile`` imports keep
+# working.
+from .sketches import P2Quantile, Welford  # noqa: E402,F401
 
 
-class P2Quantile:
-    """The P² streaming quantile estimator (Jain & Chlamtac 1985).
-
-    Five markers track the running ``p``-quantile in O(1) memory; exact
-    below five observations, approximate after (parabolic marker
-    adjustment).  Accuracy is excellent for the mid quantiles and
-    degrades gracefully in the tails — the docs carry the caveat.
-    """
-
-    __slots__ = ("p", "_q", "_n", "_np", "_dn", "count")
-
-    def __init__(self, p: float):
-        assert 0.0 < p < 1.0
-        self.p = p
-        self.count = 0
-        self._q: List[float] = []           # marker heights
-        self._n = [0, 1, 2, 3, 4]           # marker positions (0-based)
-        self._np = [0.0, 2 * p, 4 * p, 2 + 2 * p, 4.0]  # desired positions
-        self._dn = [0.0, p / 2, p, (1 + p) / 2, 1.0]
-
-    def add(self, x: float) -> None:
-        self.count += 1
-        q, n = self._q, self._n
-        if self.count <= 5:
-            q.append(x)
-            q.sort()
-            return
-        # locate cell k and clamp the extremes
-        if x < q[0]:
-            q[0] = x
-            k = 0
-        elif x >= q[4]:
-            q[4] = x
-            k = 3
-        else:
-            k = 0
-            while k < 3 and x >= q[k + 1]:
-                k += 1
-        for i in range(k + 1, 5):
-            n[i] += 1
-        for i in range(5):
-            self._np[i] += self._dn[i]
-        # adjust the three middle markers toward their desired positions
-        for i in (1, 2, 3):
-            d = self._np[i] - n[i]
-            if (d >= 1 and n[i + 1] - n[i] > 1) or \
-                    (d <= -1 and n[i - 1] - n[i] < -1):
-                d = 1 if d > 0 else -1
-                # parabolic (P²) candidate, linear fallback
-                qi = q[i] + d / (n[i + 1] - n[i - 1]) * (
-                    (n[i] - n[i - 1] + d) * (q[i + 1] - q[i])
-                    / (n[i + 1] - n[i])
-                    + (n[i + 1] - n[i] - d) * (q[i] - q[i - 1])
-                    / (n[i] - n[i - 1]))
-                if not q[i - 1] < qi < q[i + 1]:
-                    qi = q[i] + d * (q[i + d] - q[i]) / (n[i + d] - n[i])
-                q[i] = qi
-                n[i] += d
-
-    def result(self) -> float:
-        if self.count == 0:
-            return float("nan")
-        if self.count <= 5:
-            return float(np.percentile(np.asarray(self._q), self.p * 100))
-        return self._q[2]
+def decision_p99_ms(sim: Simulator) -> Optional[float]:
+    """p99 of the tracked decision latencies, in ms, or None when none
+    were recorded.  Reads whichever representation the simulator kept:
+    the exact materialized list (np.percentile, the legacy output), or —
+    on streaming/``record_sink`` runs, where the list would grow without
+    bound — the O(1) P² sketch (approximate; the p99 is the only
+    quantile ever consumed from it)."""
+    sketch = getattr(sim, "_decision_sketch", None)
+    if sketch is not None:
+        return float(sketch.result() * 1e3) if sketch.count else None
+    if sim.decision_times:
+        return float(np.percentile(np.array(sim.decision_times) * 1e3, 99))
+    return None
 
 
 class StreamingMetrics:
@@ -296,10 +228,7 @@ class StreamingMetrics:
     def result(self, sim: Simulator) -> Metrics:
         """Finalize against the finished simulator (utilization needs its
         node-seconds integrals; decision times live there too)."""
-        dec = None
-        if sim.decision_times:
-            dec = float(np.percentile(
-                np.array(sim.decision_times) * 1e3, 99))
+        dec = decision_p99_ms(sim)
         n = self.n_records
         if n == 0:
             nan = float("nan")
@@ -349,10 +278,9 @@ def collect(sim: Simulator) -> Metrics:
         # an empty trace (e.g. an over-filtered scenario) has no horizon:
         # every averaged metric is NaN rather than a min()-over-empty crash
         nan = float("nan")
-        dec = (float(np.percentile(np.array(sim.decision_times) * 1e3, 99))
-               if sim.decision_times else None)
         return Metrics(nan, nan, nan, nan, nan, nan, nan, nan, nan,
-                       n_completed=0, n_jobs=0, decision_p99_ms=dec)
+                       n_completed=0, n_jobs=0,
+                       decision_p99_ms=decision_p99_ms(sim))
     by_type = {t: [r for r in recs if r.job.jtype is t] for t in JobType}
     od = by_type[JobType.ONDEMAND]
     rigid = by_type[JobType.RIGID]
@@ -367,9 +295,7 @@ def collect(sim: Simulator) -> Metrics:
             return False
         return (r.first_start - r.job.submit_time) <= sim.cfg.instant_eps
 
-    dec = None
-    if sim.decision_times:
-        dec = float(np.percentile(np.array(sim.decision_times) * 1e3, 99))
+    dec = decision_p99_ms(sim)
     return Metrics(
         avg_turnaround_h=_avg_turnaround(recs),
         avg_turnaround_rigid_h=_avg_turnaround(rigid),

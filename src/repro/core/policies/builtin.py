@@ -254,6 +254,29 @@ class FcfsNoBackfill(FcfsEasyBackfill):
         pass
 
 
+@register_policy("queue", "XFACTOR")
+class XFactorEasyBackfill(FcfsEasyBackfill):
+    """Expansion-factor aging priority (Maui/Moab XFactor) with EASY
+    backfill: rank by (wait + estimate) / estimate, largest first, so
+    short jobs age fast and nothing starves.  Arrived on-demand jobs
+    stay pinned to the front exactly as under FCFS.
+
+    The key reads the clock, so keys are declared unstable and the
+    queue re-sorts with fresh keys every scheduling pass — the
+    documented O(n log n)-per-pass regime (docs/performance.md) that
+    batched scheduling rounds (``SimConfig.batch_rounds``) exist to
+    amortize."""
+
+    order_keys_stable = False
+
+    def order_key(self, view: SchedulerView, jid: int):
+        job = view.jobs[jid]
+        est = max(job.t_estimate, 1.0)
+        xfactor = (view.now - job.submit_time + est) / est
+        return (0 if view.od_front_map.get(jid) else 1,
+                -xfactor, job.submit_time, jid)
+
+
 # --------------------------------------------------------------- elasticity
 @register_policy("elasticity", "NONE")
 class LeaseRepayOnly(ElasticityPolicy):

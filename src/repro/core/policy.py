@@ -111,6 +111,27 @@ class SchedulerView:
     `now` and `free` change every event and are properties, as are the
     fault-axis counters `down` / `draining` and the active `fault_model`
     name (repro.faults; all zero/"none" on a perfect machine).
+
+    **Round-awareness contract** (``SimConfig.batch_rounds``, exposed as
+    :attr:`batch_rounds`): with batch scheduling rounds enabled the
+    simulator calls queue/elasticity hooks once per round boundary, not
+    once per event — everything that arrived, completed, or sent notice
+    since the previous pass is visible *at once*.  Policies that honor
+    the contract need no changes; concretely they must
+
+    * read the clock from ``view.now`` at the pass (it is the round
+      boundary, by construction >= every batched event's time), never
+      cache it across passes;
+    * treat the queue as a set that may have grown by many jobs since
+      the last pass (the builtin EASY backfill already scans a
+      ``backfill_depth`` window per pass, so its per-pass cost was
+      always O(window), not O(events));
+    * accept that ``order_keys_stable`` caching spans rounds exactly as
+      it spans events — invalidation points are unchanged;
+    * never assume a pass follows each arrival: only *on-demand*
+      arrivals force an immediate pass (the Obs-10 path); batch-job
+      starts may be up to one round stale.  Notice/arrival policies are
+      NOT round-deferred — ``on_notice`` and ``acquire`` stay per-event.
     """
 
     def __init__(self, sim: "Simulator"):
@@ -154,6 +175,14 @@ class SchedulerView:
     def fault_model(self) -> str:
         """Active fault-model name; "none" on a perfect machine."""
         return self._sim.fault_model_name
+
+    @property
+    def batch_rounds(self) -> float:
+        """Scheduling-round interval in seconds; 0 on the per-event
+        engine.  A policy may use it as its staleness bound: queue state
+        observed during a pass is at most this many sim-seconds old
+        (see the round-awareness contract in the class docstring)."""
+        return self._sim.cfg.batch_rounds
 
     def od_front(self, jid: int) -> bool:
         return bool(self.od_front_map.get(jid))

@@ -34,6 +34,7 @@ from .cluster import Lease, NodeLedger
 from .job import JobSpec, JobType, NoticeKind, RunState
 from .policy import (ARRIVAL_POLICIES, MECHANISMS, NOTICE_POLICIES,
                      PolicyBundle, SchedulerOps, resolve_mechanism)
+from .sketches import P2Quantile
 from .structures import OrderedSet, WaitQueue
 
 
@@ -62,6 +63,24 @@ class SimConfig:
     #: construction; the failure/repair stream is materialized into the
     #: event heap up front so injection is deterministic per spec.
     faults: object = "none"
+    #: batch scheduling rounds (Firmament-style): interval in seconds
+    #: between scheduling passes.  0 (default) is the per-event engine —
+    #: bit-for-bit the golden-tested behavior, one epilogue ``_schedule``
+    #: pass per event.  > 0 accumulates events between fixed round
+    #: boundaries (heap pops still advance state and fire per-type
+    #: semantics — notices reserve, releases route to collectors, ENDs
+    #: retire) and runs ONE deferred pass at the next multiple of
+    #: ``batch_rounds``; on-demand arrivals stay immediate-path (their
+    #: acquire plus an epilogue pass run at arrival, Obs-10).  Queued
+    #: batch jobs trade up to one round of start staleness for
+    #: order-of-magnitude fewer passes (docs/performance.md carries the
+    #: measured fidelity-vs-speed curve).
+    batch_rounds: float = 0.0
+    #: run the node-ledger invariant scan (``NodeLedger.check``) after
+    #: every event.  Formerly unconditional; the scan was ~4% of the
+    #: per-event hot loop (benchmarks/bench_profile.py), so it is now a
+    #: debugging aid — property/chaos tests switch it on.
+    check_invariants: bool = False
 
     # legacy introspection helpers; composite mechanisms ("BASE") have no
     # "&" and report themselves on both axes.
@@ -176,9 +195,25 @@ class Simulator:
         self.occupied_integral = 0.0
         self.waste_node_seconds = 0.0
         self._last_t = 0.0
+        #: materialized decision-latency samples (legacy path).  On
+        #: streaming runs (a ``record_sink`` is installed) the list
+        #: would grow one float per od arrival + scheduling pass over a
+        #: million-job replay, so latencies fold into a P² p99 sketch
+        #: instead (the p99 is the only statistic ever consumed there —
+        #: see metrics.decision_p99_ms); the list then stays empty.
         self.decision_times: List[float] = []
+        self._decision_sketch: Optional[P2Quantile] = \
+            P2Quantile(0.99) if (record_sink is not None
+                                 and cfg.track_decision_time) else None
         self._in_schedule = False
         self._sched_pending = False
+        self._sched_now = False              # od arrival: pass runs this event
+        self._round_next = math.inf          # pending deferred-pass boundary
+        #: per-kind bound handlers, filled lazily on first dispatch — a
+        #: dict hit replaces the per-event ``getattr(self, f"_on_{kind}")``
+        #: string-build + attribute walk (a profiled hot-loop frame);
+        #: subclass overrides still win because binding goes through self.
+        self._handlers: Dict[str, Callable[..., None]] = {}
         self.n_ingested = 0                  # jobs pulled from the trace
         self.n_retired = 0                   # records handed to the sink
         self._last_completion = 0.0
@@ -239,7 +274,14 @@ class Simulator:
                     f"({self.cfg.arrival_lookahead}s) must exceed the "
                     "workload's largest notice lead + late window")
             self._push_trace(j.notice_time, j.jid, 1, "notice", (j.jid,))
-            self._push_trace(j.est_arrival + self.cfg.release_threshold,
+            # A LATE notice drawn near t=0 can place est_arrival (and so
+            # the timeout) before the simulation start, which would pop a
+            # negative-time event and break clock monotonicity.  The
+            # reservation cannot expire before the notice that creates it,
+            # so floor the timeout there — a no-op for every trace whose
+            # timeouts already fall after their notices.
+            self._push_trace(max(j.est_arrival + self.cfg.release_threshold,
+                                 j.notice_time),
                              j.jid, 2, "od_timeout", (j.jid,))
 
     def _feed(self) -> None:
@@ -279,7 +321,11 @@ class Simulator:
         Handlers do not re-enter ``_schedule`` per sub-event; they raise
         ``_sched_pending`` and the loop epilogue runs one scheduling pass
         per event (handlers invoked it as their final statement, so the
-        hoisted call is behaviorally identical).
+        hoisted call is behaviorally identical).  With
+        ``SimConfig.batch_rounds > 0`` the epilogue pass is instead
+        deferred to the next round boundary (od arrivals excepted); the
+        drain naturally flushes a trailing deferred pass, which may
+        start queued jobs and extend the run.
 
         On the streaming path, each iteration first tops the heap up
         with every arrival inside the lookahead window of the next
@@ -291,14 +337,23 @@ class Simulator:
         return self.records
 
     def next_event_time(self) -> Optional[float]:
-        """Earliest pending event time, or None when the simulation is
-        drained.  Ingests from a streaming arrival iterator as needed to
-        answer (ingestion order is the same the run loop would use, so
-        peeking never perturbs the event sequence).  This is the pacing
-        signal external drivers (``repro.service``) sleep against."""
+        """Earliest pending event time — including a deferred batch-round
+        scheduling pass (``SimConfig.batch_rounds``), which is an event
+        for pacing purposes — or None when the simulation is drained.
+        Ingests from a streaming arrival iterator as needed to answer
+        (ingestion order is the same the run loop would use, so peeking
+        never perturbs the event sequence).  This is the pacing signal
+        external drivers (``repro.service``) sleep against: in batch
+        mode the daemon therefore sleeps to round boundaries and its
+        ``step_until(next_event_time())`` cadence runs each deferred
+        pass at exactly its boundary."""
         if self._next_arrival is not None:
             self._feed()
-        return self._heap[0][0] if self._heap else None
+        t = self._heap[0][0] if self._heap else None
+        rn = self._round_next
+        if rn != math.inf:
+            return rn if t is None or rn < t else t
+        return t
 
     def step_until(self, t_limit: float) -> Optional[float]:
         """Process every event with time <= ``t_limit`` and stop.
@@ -308,25 +363,74 @@ class Simulator:
         sequence one ``run()`` would (each loop iteration depends only on
         heap state, never on how the limits partition it), which is what
         makes an external replay driver decision-for-decision identical
-        to the offline simulator.  Returns the next pending event time
-        (> ``t_limit``) or None when drained; callers that passed a
-        finite limit must eventually call :meth:`finalize` (or
-        :meth:`run`) to flush retained records into a ``record_sink``.
+        to the offline simulator.  A deferred batch-round pass behaves
+        like an event here: it runs only once its boundary is <= the
+        limit (ties go to heap events — a pass at a boundary runs after
+        every event at that time), and a still-pending boundary is
+        carried to the next call, so the partitioning property holds in
+        batch mode too.  Returns the next pending event (or pending
+        round-pass) time > ``t_limit``, or None when drained; callers
+        that passed a finite limit must eventually call :meth:`finalize`
+        (or :meth:`run`) to flush retained records into a
+        ``record_sink``.
         """
         heap = self._heap
+        handlers = self._handlers
+        batch = self.cfg.batch_rounds
+        track = self.cfg.track_decision_time
+        check = self.ledger.check if self.cfg.check_invariants else None
         while True:
             if self._next_arrival is not None:
                 self._feed()
+            if batch:
+                rn = self._round_next
+                if rn < (heap[0][0] if heap else math.inf):
+                    # the deferred pass is due before the next event
+                    if rn > t_limit:
+                        break
+                    self._advance(rn)
+                    self._round_next = math.inf
+                    if track:
+                        t0 = _walltime.perf_counter()
+                        self._schedule()
+                        self._record_decision(_walltime.perf_counter() - t0)
+                    else:
+                        self._schedule()
+                    if check is not None:
+                        check()
+                    continue
             if not heap or heap[0][0] > t_limit:
                 break
             t, _, kind, data = heapq.heappop(heap)
             self._advance(t)
-            getattr(self, f"_on_{kind}")(*data)
+            h = handlers.get(kind)
+            if h is None:
+                h = handlers[kind] = getattr(self, f"_on_{kind}")
+            h(*data)
             if self._sched_pending:
                 self._sched_pending = False
-                self._schedule()
-            self.ledger.check()
-        return heap[0][0] if heap else None
+                if batch and not self._sched_now:
+                    # defer to the next round boundary (>= now; equal
+                    # when the event lands exactly on one).  An earlier
+                    # boundary may already be pending — keep it.
+                    if self._round_next == math.inf:
+                        self._round_next = batch * math.ceil(self.now / batch)
+                elif track:
+                    self._sched_now = False
+                    self._round_next = math.inf  # this pass supersedes it
+                    t0 = _walltime.perf_counter()
+                    self._schedule()
+                    self._record_decision(_walltime.perf_counter() - t0)
+                else:
+                    self._sched_now = False
+                    self._round_next = math.inf  # this pass supersedes it
+                    self._schedule()
+            if check is not None:
+                check()
+        nxt = heap[0][0] if heap else math.inf
+        if self._round_next < nxt:
+            nxt = self._round_next
+        return None if nxt == math.inf else nxt
 
     def finalize(self) -> None:
         """Flush post-run record retention; idempotent."""
@@ -391,7 +495,7 @@ class Simulator:
         else:
             started = self.policies.arrival.acquire(self.ops, jid, need)
         if self.cfg.track_decision_time:
-            self.decision_times.append(_walltime.perf_counter() - t0)
+            self._record_decision(_walltime.perf_counter() - t0)
         if started:
             rec = self.records[jid]
             rec.instant = (rec.first_start - job.submit_time) <= self.cfg.instant_eps
@@ -402,6 +506,19 @@ class Simulator:
             if jid not in self.collecting:
                 self.collecting.append(jid)
         self._sched_pending = True
+        # batch mode: the od arrival's epilogue pass is never deferred to
+        # the round boundary — Obs-10 responsiveness survives any round
+        # length (no-op flag on the per-event engine).
+        self._sched_now = True
+
+    def _record_decision(self, dt: float) -> None:
+        """One decision-latency sample: the materialized list, or the P²
+        p99 sketch on streaming runs (see ``decision_times``)."""
+        sketch = self._decision_sketch
+        if sketch is not None:
+            sketch.add(dt)
+        else:
+            self.decision_times.append(dt)
 
     def _start_od(self, jid: int) -> None:
         job = self.jobs[jid]

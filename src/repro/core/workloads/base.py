@@ -328,6 +328,12 @@ class Scenario:
     #: ``SimConfig.faults`` for every run of this scenario (explicit
     #: ``sim_kw["faults"]`` overrides win).
     faults: object = None
+    #: batch scheduling-round interval in seconds (see
+    #: ``SimConfig.batch_rounds``): None/0 for the per-event engine,
+    #: > 0 for one deferred scheduling pass per round.  Experiment
+    #: threads it into ``SimConfig.batch_rounds`` for every run of this
+    #: scenario (explicit ``sim_kw["batch_rounds"]`` overrides win).
+    batch_rounds: Optional[float] = None
 
     @property
     def label(self) -> str:
@@ -362,6 +368,14 @@ class Scenario:
         if self.faults not in (None, "none"):
             from ...faults import resolve_faults
             resolve_faults(self.faults)  # raises on unknown model / bad params
+        if self.batch_rounds is not None and (
+                not isinstance(self.batch_rounds, (int, float))
+                or isinstance(self.batch_rounds, bool)
+                or self.batch_rounds < 0
+                or not np.isfinite(self.batch_rounds)):
+            raise ValueError(
+                f"scenario {self.label!r}: batch_rounds must be a finite "
+                f"number >= 0, got {self.batch_rounds!r}")
 
     def realize(self, seed: Optional[int] = None
                 ) -> Tuple[List[JobSpec], int]:

@@ -24,6 +24,14 @@ The pacing loop passes ``step_until`` a non-decreasing sequence of
 limits, which the simulator guarantees processes the exact event
 sequence one offline ``run()`` would — see docs/service.md for why that
 makes shadow fidelity hold by construction rather than by testing luck.
+
+Batch scheduling rounds (``SimConfig.batch_rounds``, via
+``ServiceConfig.sim_overrides``) need no daemon changes:
+``Simulator.next_event_time`` reports a pending deferred pass's round
+boundary as the next event, so both loops sleep to round boundaries and
+each ``step_until(next_event_time())`` call runs the deferred pass at
+exactly its boundary.  Shadow fidelity still holds by construction —
+the offline comparison run shares the same ``batch_rounds``.
 """
 from __future__ import annotations
 

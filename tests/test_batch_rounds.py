@@ -1,0 +1,180 @@
+"""Batched scheduling rounds (``SimConfig.batch_rounds``) semantics.
+
+Per-event mode (``batch_rounds=0``, the default) must stay bit-identical
+to the engine without the knob; batch mode defers queue passes to fixed
+round boundaries while on-demand arrivals keep the immediate path
+(Obs-10).  The measured fidelity-vs-speed curve lives in
+benchmarks/bench_scale.bench_batch_fidelity; these are the semantic
+contracts it relies on.
+"""
+import dataclasses
+
+import pytest
+
+from repro.core import (JobSpec, JobType, NoticeKind, SimConfig, Simulator,
+                        StreamingMetrics, WorkloadConfig, generate)
+from repro.core.experiment import RunSpec, _sim_kw
+from repro.core.metrics import decision_p99_ms
+from repro.core.workloads import get_scenario
+
+N = 100  # cluster size for micro-scenarios
+
+
+def rigid(jid, t, size, rt, est=None, **kw):
+    return JobSpec(jid, JobType.RIGID, "p", t, size, est or rt * 2, rt, **kw)
+
+
+def od(jid, t, size, rt, kind=NoticeKind.NONE, notice=None, est_arr=None):
+    return JobSpec(jid, JobType.ONDEMAND, "p", t, size, rt * 2, rt,
+                   notice_kind=kind, notice_time=notice, est_arrival=est_arr)
+
+
+def run(jobs, mech="N&PAA", n=N, **kw):
+    sim = Simulator(SimConfig(n_nodes=n, mechanism=mech, **kw), jobs)
+    sim.run()
+    return sim
+
+
+def _outcomes(sim):
+    return sorted((r.job.jid, r.first_start, r.completion, r.killed,
+                   r.n_preempted, r.n_shrunk, r.instant)
+                  for r in sim.records.values())
+
+
+# --------------------------------------------------------- per-event identity
+def test_batch_zero_identical_to_default():
+    """batch_rounds=0 must be the per-event engine bit for bit — same
+    outcome tuples on an organic workload with on-demand traffic."""
+    cfg = WorkloadConfig(n_jobs=150, n_nodes=512, n_projects=12,
+                         horizon_days=4.0, seed=3, frac_od_projects=0.3)
+    jobs = generate(cfg)
+    ref = run(list(jobs), mech="CUA&SPAA", n=512)
+    b0 = run(list(jobs), mech="CUA&SPAA", n=512, batch_rounds=0.0)
+    assert _outcomes(ref) == _outcomes(b0)
+
+
+# ------------------------------------------------------------ round deferral
+def test_batch_job_start_deferred_to_round_boundary():
+    """Free nodes are available at submit, but the scheduling pass for a
+    batch job waits for the next round boundary."""
+    jobs = [rigid(0, 0.0, 10, 500.0), rigid(1, 50.0, 10, 100.0)]
+    per_event = run([dataclasses.replace(j) for j in jobs])
+    batched = run(jobs, batch_rounds=300.0)
+    assert per_event.records[1].first_start == 50.0
+    # t=0 lands exactly on a boundary, so job 0 still starts at 0
+    assert batched.records[0].first_start == 0.0
+    assert batched.records[1].first_start == 300.0
+
+
+def test_od_arrival_immediate_despite_huge_rounds():
+    """On-demand arrivals keep the immediate path (Obs-10): a round
+    length longer than the whole run must not delay an od start."""
+    jobs = [rigid(0, 0.0, 10, 1000.0), od(1, 50.0, 10, 100.0)]
+    sim = run(jobs, mech="CUA&SPAA", batch_rounds=1e6)
+    assert sim.records[1].first_start == 50.0
+    assert sim.records[1].instant
+
+
+def test_od_forced_pass_supersedes_pending_round():
+    """The immediate od pass is a full pass: queued batch work start
+    there too, and the pending boundary pass is cancelled, not re-run."""
+    jobs = [rigid(0, 10.0, 10, 500.0), od(1, 50.0, 10, 100.0)]
+    sim = run(jobs, mech="CUA&SPAA", batch_rounds=300.0)
+    # job 0's pass was deferred to t=300, but the od arrival at t=50
+    # forces a pass that starts it then
+    assert sim.records[0].first_start == 50.0
+    assert sim.records[1].first_start == 50.0
+
+
+# ------------------------------------------------------- incremental driving
+def test_next_event_time_reports_round_boundary():
+    jobs = [rigid(0, 0.0, 10, 1000.0), rigid(1, 50.0, 10, 100.0)]
+    sim = Simulator(SimConfig(n_nodes=N, batch_rounds=300.0), jobs)
+    nxt = sim.step_until(50.0)
+    # the deferred pass is the next "event": both the return value and
+    # the peek must report the boundary, and peeking is non-perturbing
+    assert nxt == 300.0
+    assert sim.next_event_time() == 300.0
+    assert sim.next_event_time() == 300.0
+    assert sim.step_until(300.0) == 400.0       # job 1 ran 300 -> 400
+    sim.run()
+    assert sim.records[1].first_start == 300.0
+
+
+def test_step_until_partitioning_identity_in_batch_mode():
+    """Any non-decreasing sequence of limits must replay the exact event
+    sequence of a single run() — with deferred round passes carried
+    across step_until calls."""
+    jobs, n_nodes = get_scenario("bursty-od", n_jobs=30).realize(seed=6)
+    cfg = SimConfig(n_nodes=n_nodes, mechanism="CUA&SPAA",
+                    batch_rounds=240.0)
+    ref = Simulator(cfg, list(jobs)).run()
+    sim = Simulator(cfg, list(jobs))
+    t = 0.0
+    while True:
+        nxt = sim.step_until(t)
+        if nxt is None:
+            break
+        t = nxt + 1.0
+    sim.finalize()
+    assert _outcomes(sim) == sorted(
+        (r.job.jid, r.first_start, r.completion, r.killed,
+         r.n_preempted, r.n_shrunk, r.instant) for r in ref.values())
+
+
+# -------------------------------------------------------------- config plumb
+def test_scenario_batch_rounds_validation():
+    sc = get_scenario("bursty-od", n_jobs=10)
+    for bad in (-1.0, float("inf"), float("nan"), True):
+        with pytest.raises(ValueError, match="batch_rounds"):
+            dataclasses.replace(sc, batch_rounds=bad).validate()
+    dataclasses.replace(sc, batch_rounds=900.0).validate()  # fine
+
+
+def test_experiment_threads_scenario_batch_rounds():
+    sc = dataclasses.replace(get_scenario("bursty-od", n_jobs=10),
+                             batch_rounds=600.0)
+    kw = _sim_kw(RunSpec(mechanism="CUA&SPAA", workload=sc, seed=0))
+    assert kw["batch_rounds"] == 600.0
+    # an explicit override wins over the scenario field
+    kw = _sim_kw(RunSpec(mechanism="CUA&SPAA", workload=sc, seed=0,
+                         sim_kw=(("batch_rounds", 0.0),)))
+    assert kw["batch_rounds"] == 0.0
+
+
+# --------------------------------------------------- decision-time tracking
+def test_scheduling_passes_are_timed_without_od_traffic():
+    """track_decision_time must time scheduling passes themselves, not
+    just od-arrival handling — a workload with zero od jobs still
+    yields samples."""
+    jobs = [rigid(0, 0.0, 10, 500.0), rigid(1, 50.0, 10, 100.0)]
+    sim = run(jobs, track_decision_time=True)
+    assert len(sim.decision_times) > 0
+    assert decision_p99_ms(sim) is not None
+
+
+def test_decision_sketch_replaces_list_on_streaming_runs():
+    jobs = [rigid(0, 0.0, 10, 500.0), rigid(1, 50.0, 10, 100.0),
+            od(2, 60.0, 10, 100.0)]
+    cfg = SimConfig(n_nodes=N, mechanism="CUA&SPAA",
+                    track_decision_time=True)
+    sink = StreamingMetrics(instant_eps=cfg.instant_eps)
+    sim = Simulator(cfg, jobs, record_sink=sink)
+    sim.run()
+    assert sim.decision_times == []          # the unbounded list stays empty
+    assert sim._decision_sketch is not None
+    assert sim._decision_sketch.count > 0
+    assert decision_p99_ms(sim) is not None
+
+
+# ------------------------------------------------------- od_timeout clamping
+def test_late_notice_timeout_never_precedes_notice():
+    """Regression: a LATE notice near t=0 can put est_arrival (and so
+    the reservation timeout) before simulation start; the timeout is
+    floored at the notice so the clock never runs backwards."""
+    jobs = [od(0, 100.0, 10, 100.0, kind=NoticeKind.LATE, notice=5.0,
+               est_arr=-2000.0)]
+    sim = run(jobs, mech="CUA&SPAA")         # pre-fix: negative-time event
+    rec = sim.records[0]
+    assert rec.completion is not None
+    assert rec.first_start == 100.0

@@ -227,10 +227,21 @@ def test_spec_loads_and_counts_cells():
     ({"trace": [{"name": "no-such-trace"}]}, "unknown trace"),
     ({"trace": []}, "at least one"),
     ({"grid.od_frac": [0.9], "grid.malleable_frac": [0.9]}, "rigid"),
+    ({"grid.batch_rounds": [-5]}, "batch_rounds"),
 ])
 def test_spec_validation_errors(over, err):
     with pytest.raises(CampaignSpecError, match=err):
         CampaignSpec.from_dict(_spec(**over))
+
+
+def test_spec_batch_rounds_axis_threads_into_cells():
+    spec = CampaignSpec.from_dict(_spec(**{
+        "grid.batch_rounds": [0, 900]}))
+    assert spec.n_cells == 2 * 2 * 2 * 2   # x2 for the new axis
+    got = {sc.batch_rounds for _regime, sc in spec.cells()}
+    assert got == {0.0, 900.0}
+    assert any(sc.label.endswith("/b:900")
+               for _regime, sc in spec.cells())
 
 
 def test_spec_toml_file_loads(tmp_path):

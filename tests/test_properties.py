@@ -10,9 +10,12 @@ pytest.importorskip("hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
+import numpy as np
+
 from repro.core import (MECHANISMS, JobType, NoticeKind, SimConfig, Simulator,
                         WaitQueue, WorkloadConfig, apportion_shrink, collect,
                         generate, select_preemption_victims)
+from repro.core.metrics import P2Quantile
 
 # new-policy composites ride the same drain/conservation properties
 EXTRA_MECHANISMS = ("CUA&STEAL", "CUA&POOL")
@@ -102,7 +105,8 @@ def test_random_workload_drains_and_conserves_nodes(seed, mech):
     cfg = WorkloadConfig(n_jobs=60, n_nodes=512, n_projects=12,
                          horizon_days=4.0, seed=seed)
     jobs = generate(cfg)
-    sim = Simulator(SimConfig(n_nodes=cfg.n_nodes, mechanism=mech), jobs)
+    sim = Simulator(SimConfig(n_nodes=cfg.n_nodes, mechanism=mech,
+                              check_invariants=True), jobs)
     sim.run()
     m = collect(sim)
     assert m.n_completed == m.n_jobs
@@ -171,11 +175,88 @@ def test_od_jobs_never_preempted(seed, mech):
                          horizon_days=4.0, seed=seed, frac_od_projects=0.3,
                          frac_rigid_projects=0.4)
     jobs = generate(cfg)
-    sim = Simulator(SimConfig(n_nodes=cfg.n_nodes, mechanism=mech), jobs)
+    sim = Simulator(SimConfig(n_nodes=cfg.n_nodes, mechanism=mech,
+                              check_invariants=True), jobs)
     sim.run()
     for r in sim.records.values():
         if r.job.jtype is JobType.ONDEMAND:
             assert r.n_preempted == 0 and r.n_shrunk == 0
+
+
+# --------------------------------------------------- P² quantile sketch
+def _p2_markers_valid(sk):
+    """The estimator's structural invariants after any stream: marker
+    heights non-decreasing, marker positions strictly increasing (the
+    property that makes every adjustment denominator >= 1 — the classic
+    P² divide-by-zero on duplicate-heavy streams cannot occur)."""
+    assert all(a <= b + 1e-12 for a, b in zip(sk._q, sk._q[1:]))
+    assert all(b - a >= 1 for a, b in zip(sk._n, sk._n[1:]))
+
+
+@given(values=st.lists(st.floats(0.0, 1e9), min_size=1, max_size=5),
+       p=st.floats(0.01, 0.99))
+@settings(max_examples=100, deadline=None)
+def test_p2_exact_below_five_observations(values, p):
+    sk = P2Quantile(p)
+    for v in values:
+        sk.add(v)
+    assert sk.result() == pytest.approx(
+        float(np.percentile(np.asarray(values), p * 100)))
+
+
+@given(value=st.floats(-1e9, 1e9), n=st.integers(6, 400),
+       p=st.sampled_from((0.5, 0.9, 0.99)))
+@settings(max_examples=60, deadline=None)
+def test_p2_constant_stream_is_exact(value, n, p):
+    """All five markers collapse to one height; the estimate is exactly
+    the constant and no marker adjustment ever divides by zero."""
+    sk = P2Quantile(p)
+    for _ in range(n):
+        sk.add(value)
+    assert sk.result() == value
+    _p2_markers_valid(sk)
+
+
+@given(data=st.data(), p=st.sampled_from((0.5, 0.9, 0.99)))
+@settings(max_examples=150, deadline=None)
+def test_p2_duplicate_heavy_streams(data, p):
+    """Streams drawn from <= 3 distinct values are the historical P²
+    crash case: textbook transcriptions let adjacent markers collide on
+    ties and divide by zero in the parabolic adjustment.  The invariants
+    under test are exactly the ones that preclude that — strictly
+    increasing marker positions, sorted marker heights — plus the
+    estimate staying inside the sample range.  No rank-accuracy claim
+    here: on massive-tie streams P²'s value interpolates between the
+    distinct levels and its rank error is genuinely unbounded (the
+    documented tail caveat); np.percentile comparisons live in the
+    exact small-n and sorted-stream tests."""
+    support = data.draw(st.lists(st.floats(0.0, 1e6), min_size=1,
+                                 max_size=3, unique=True))
+    values = data.draw(st.lists(st.sampled_from(support), min_size=6,
+                                max_size=300))
+    sk = P2Quantile(p)
+    for v in values:
+        sk.add(v)
+    est = sk.result()
+    assert min(values) <= est <= max(values)
+    _p2_markers_valid(sk)
+
+
+@given(n=st.integers(50, 400), scale=st.floats(1e-3, 1e6),
+       p=st.sampled_from((0.5, 0.9)))
+@settings(max_examples=60, deadline=None)
+def test_p2_sorted_stream_tracks_percentile(n, scale, p):
+    """A sorted (monotone) stream — the arrival pattern of cumulative
+    latencies — must track np.percentile to a small rank error."""
+    values = [i * scale / n for i in range(n)]
+    sk = P2Quantile(p)
+    for v in values:
+        sk.add(v)
+    est = sk.result()
+    assert values[0] <= est <= values[-1]
+    _p2_markers_valid(sk)
+    rank = sum(1 for v in values if v <= est) / n
+    assert abs(rank - p) <= 0.15
 
 
 # --------------------------------------------------- chunked SWF parsing

@@ -178,3 +178,19 @@ def test_rigid_wont_borrow_reserved_past_est_arrival():
     assert sim.records[1].instant
     assert sim.records[2].n_preempted == 0
     assert sim.records[2].first_start > 1000.0
+
+
+def test_xfactor_ages_short_jobs_ahead_of_long():
+    """queue_policy="XFACTOR": expansion-factor priority ranks the short
+    waiter above the long one (its xfactor grows ~200x faster), while
+    plain EASY keeps FCFS order and strands it behind the wide head."""
+    def jobs():
+        return [rigid(0, 0.0, N, 500.0),                  # fills the machine
+                rigid(1, 1.0, N, 10000.0, est=20000.0),   # long, wide, first
+                rigid(2, 2.0, 10, 50.0, est=100.0)]       # short, later
+    easy = run(jobs())
+    assert easy.records[1].first_start == pytest.approx(500.0)
+    assert easy.records[2].first_start == pytest.approx(10500.0)
+    xf = run(jobs(), queue_policy="XFACTOR")
+    assert xf.records[2].first_start == pytest.approx(500.0)
+    assert xf.records[1].first_start == pytest.approx(550.0)
