@@ -1,0 +1,120 @@
+"""Sweeps-on-device rung: a whole mechanism grid as ONE device program.
+
+Runs an ``Experiment(device="jax")`` grid spanning every registered
+mechanism (x notice mixes x seeds; >= 600 cells at the default tier),
+captures each cell's decision stream, replays the entire grid as a
+single jitted XLA call, and gates:
+
+* ``parity_ok`` — every replayed decision equals the numpy engine's
+  recorded output exactly (x64), per cell, job for job.  The numpy
+  process-fan-out sweep stays the identity baseline: its metrics are
+  the sweep's numbers, the device program must reproduce them.
+* ``within_bound`` — steady-state device time per decision stays under
+  ``DEVICE_US_PER_CALL_BOUND`` (generous: ~100x the measured CPU-backend
+  steady state, so the gate catches structural regressions such as the
+  grid fragmenting into per-cell programs, not machine noise).
+
+The row also reports the host-side numpy replay time of the exact same
+captured calls, so ``device_speedup`` isolates kernel-dispatch gains
+from everything the simulator does around the kernels (see
+docs/performance.md "When device dispatch wins").
+
+Methodology follows bench_roofline.py: measured terms + analytic
+context in one artifact row, provenance-stamped by run.py into
+results/bench/device_sweep.json.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from repro.core import decision as D
+from repro.core.experiment import Experiment
+from repro.core.policy import registered_mechanisms
+from repro.core.workloads import WorkloadConfig
+
+#: steady-state device time per replayed decision (CPU backend measures
+#: ~0.4 us/call; the bound is deliberately loose — it exists to catch a
+#: fragmented or retracing program, not scheduler jitter)
+DEVICE_US_PER_CALL_BOUND = 40.0
+#: calls captured per kernel per cell (bounded prefix; the parity gate
+#: covers exactly the captured calls)
+CAPTURE_LIMIT = 32
+
+
+def _host_replay_s(cells, repeats: int = 3) -> float:
+    """Re-execute every captured call through the numpy kernels (the
+    process-fan-out baseline's per-call cost, minus simulator overhead)."""
+    fns = {"easy_shadow": D.easy_shadow,
+           "select_preemption_victims": D.select_preemption_victims,
+           "apportion_shrink": D.apportion_shrink,
+           "backfill_prefilter": D.backfill_prefilter,
+           "backfill_shadow_filter": D.backfill_shadow_filter}
+    import numpy as np
+    best = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _label, trace in cells:
+            for kernel, calls in trace.calls.items():
+                fn = fns[kernel]
+                if kernel == "backfill_shadow_filter":
+                    # the trace records the *gathered* needs/ests rows:
+                    # replay with identity candidates (same work)
+                    for (needs, ests, _cand, budget, now, ts), _o in calls:
+                        fn(needs, ests, np.arange(len(needs)), budget,
+                           now, ts)
+                else:
+                    for inputs, _out in calls:
+                        fn(*inputs)
+        dt = time.perf_counter() - t0
+        best = dt if best is None else min(best, dt)
+    return best or 0.0
+
+
+def bench_device_sweep(quick: bool = False) -> List[dict]:
+    """One row per grid tier; --quick runs the small CI grid only."""
+    mechs = registered_mechanisms()
+    if quick:
+        mixes, seeds, n_jobs = ("W1", "W4"), range(4), 30
+    else:
+        # 13 mechanisms x 4 mixes x 12 seeds = 624 cells
+        mixes, seeds, n_jobs = ("W1", "W2", "W4", "W5"), range(12), 40
+    workloads = [WorkloadConfig(n_jobs=n_jobs, notice_mix=m) for m in mixes]
+    exp = Experiment(mechanisms=mechs, workloads=workloads,
+                     seeds=tuple(seeds), device="jax",
+                     device_capture=CAPTURE_LIMIT)
+    t0 = time.perf_counter()
+    res = exp.run()
+    sweep_s = time.perf_counter() - t0
+    rep = res.device_report
+    cells = [(f"{r.spec.mechanism}/s{r.spec.seed}", r.decision_trace)
+             for r in res.runs if r.decision_trace is not None]
+    host_s = _host_replay_s(cells)
+    us = rep.device_us_per_call
+    row = {"name": "device_sweep_quick" if quick else "device_sweep",
+           "n_cells": rep.n_cells,
+           "n_mechanisms": len(mechs),
+           "n_jobs": n_jobs,
+           "n_calls": rep.n_calls,
+           "n_programs": rep.n_programs,
+           "n_dropped": rep.n_dropped,
+           "dtype": rep.dtype,
+           "parity_ok": rep.parity_ok,
+           "n_mismatches": rep.n_mismatches,
+           "mismatch_sample": [repr(m) for m in rep.mismatches[:3]],
+           "calls_per_kernel": rep.calls_per_kernel,
+           "pad_per_kernel": rep.pad_per_kernel,
+           "sweep_s": round(sweep_s, 3),
+           "build_s": round(rep.build_s, 4),
+           "compile_s": round(rep.compile_s, 4),
+           "device_s": round(rep.device_s, 6),
+           "host_replay_s": round(host_s, 4),
+           "device_speedup": round(host_s / rep.device_s, 1)
+           if rep.device_s > 0 else float("inf"),
+           "us_per_call": round(us, 3),
+           "bound_us": DEVICE_US_PER_CALL_BOUND,
+           "within_bound": bool(us <= DEVICE_US_PER_CALL_BOUND),
+           "derived": (f"cells={rep.n_cells},calls={rep.n_calls},"
+                       f"parity={'ok' if rep.parity_ok else 'FAIL'},"
+                       f"programs={rep.n_programs}")}
+    return [row]

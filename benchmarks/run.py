@@ -29,6 +29,10 @@ writes the full row dicts to results/bench/*.json.  Sections:
   campaign    mini trace-zoo campaign run twice:    (results/bench/
               cells/sec + peak RSS + byte-identical  campaign.json;
               artifact gate                          docs/campaigns.md)
+  device      sweeps-on-device: a >= 600-cell       (results/bench/
+              mechanism grid replayed as ONE jitted  device_sweep.json;
+              device program, parity-gated per cell  docs/performance.md)
+              against the numpy engine
   roofline    per (arch x shape) roofline terms     (EXPERIMENTS §Roofline)
 
 Scale tiers: --quick runs (600, 2k) with the paired pre-PR baseline at
@@ -338,6 +342,36 @@ def main(argv=None) -> int:
                         "byte-deterministic)")
                 print(f"VALIDATION-FAIL,{fail}", file=sys.stderr)
                 failures.append(fail)
+    if want("device"):
+        # jax is optional in lightweight CI: skip (with a visible row)
+        # rather than fail when the device backend is absent
+        try:
+            import jax  # noqa: F401
+            have_jax = True
+        except ImportError:
+            have_jax = False
+        if have_jax:
+            from . import bench_device_sweep
+            t0 = time.perf_counter()
+            rows = bench_device_sweep.bench_device_sweep(quick=args.quick)
+            _emit("device_sweep", rows, t0,
+                  dict(prov, seeds="per-row", n_jobs="per-row",
+                       note="grid tier fixed per mode; see each row"))
+            for r in rows:
+                if not r["parity_ok"]:
+                    fail = (f"device: {r['name']} {r['n_mismatches']} device "
+                            "decision(s) diverge from the numpy engine "
+                            f"(sample: {r['mismatch_sample'][:1]})")
+                    print(f"VALIDATION-FAIL,{fail}", file=sys.stderr)
+                    failures.append(fail)
+                if not r["within_bound"]:
+                    fail = (f"device: {r['name']} {r['us_per_call']}us/call "
+                            f"> bound {r['bound_us']}us (program likely "
+                            "fragmented or retracing)")
+                    print(f"VALIDATION-FAIL,{fail}", file=sys.stderr)
+                    failures.append(fail)
+        else:
+            print("device_sweep,0,skipped: jax not installed")
     if want("roofline"):
         t0 = time.perf_counter()
         rows = bench_roofline.rows(multi_pod=False)

@@ -41,9 +41,10 @@ generator.
 """
 from .job import JobSpec, JobType, NoticeKind, RunState
 from .cluster import Lease, NodeLedger
-from .decision import (apportion_shrink, backfill_prefilter,
-                       backfill_shadow_filter, easy_shadow,
-                       expected_releases_before, select_preemption_victims)
+from .decision import (DecisionTrace, apportion_shrink,
+                       backfill_prefilter, backfill_shadow_filter,
+                       capture, easy_shadow, expected_releases_before,
+                       select_preemption_victims)
 from .structures import OrderedSet, WaitQueue
 from .policy import (ARRIVAL_POLICIES, MECHANISMS, NOTICE_POLICIES,
                      ArrivalPolicy, ElasticityPolicy, NoticePolicy,
@@ -76,8 +77,9 @@ def run_mechanism(mechanism: str, jobs, n_nodes: int, **cfg_kw) -> "Metrics":
 
 __all__ = [
     "JobSpec", "JobType", "NoticeKind", "RunState", "Lease", "NodeLedger",
-    "apportion_shrink", "backfill_prefilter", "backfill_shadow_filter",
-    "easy_shadow", "expected_releases_before", "select_preemption_victims",
+    "DecisionTrace", "apportion_shrink", "backfill_prefilter",
+    "backfill_shadow_filter", "capture", "easy_shadow",
+    "expected_releases_before", "select_preemption_victims",
     "OrderedSet", "WaitQueue",
     "MECHANISMS", "NOTICE_POLICIES", "ARRIVAL_POLICIES",
     "NoticePolicy", "ArrivalPolicy", "QueuePolicy", "ElasticityPolicy",

@@ -76,6 +76,10 @@ class RunSpec:
     #: iter_jobs), arrivals fed to the simulator incrementally, records
     #: retired through a StreamingMetrics sink
     stream: bool = False
+    #: > 0: record the first N calls per decision kernel into a
+    #: DecisionTrace shipped back on RunResult.decision_trace (the
+    #: device replay's per-cell input; see repro.core.decision_jax)
+    capture_decisions: int = 0
 
     def key(self, names: Sequence[str]) -> tuple:
         """Group key: each name is a RunSpec field, a workload field, or —
@@ -106,6 +110,9 @@ class RunResult:
     metrics: Metrics
     elapsed_s: float = 0.0
     summary: Optional[dict] = None
+    #: DecisionTrace when the spec asked for capture (picklable, so it
+    #: survives process fan-out); None otherwise
+    decision_trace: Optional[object] = None
 
 
 def _sim_kw(spec: RunSpec) -> dict:
@@ -124,8 +131,14 @@ def _sim_kw(spec: RunSpec) -> dict:
 
 def _execute(spec: RunSpec) -> RunResult:
     """Top-level so process pools can pickle it."""
+    from contextlib import nullcontext
+
+    from . import decision
+
     t0 = time.perf_counter()
     wl = spec.workload
+    cap = (decision.capture(spec.capture_decisions)
+           if spec.capture_decisions > 0 else nullcontext())
     if spec.stream:
         if isinstance(wl, Scenario):
             jobs, n_nodes = wl.iter_realize(seed=spec.seed)
@@ -137,10 +150,12 @@ def _execute(spec: RunSpec) -> RunResult:
                         **_sim_kw(spec))
         sink = StreamingMetrics(instant_eps=cfg.instant_eps)
         sim = Simulator(cfg, jobs, record_sink=sink)
-        sim.run()
+        with cap as trace:
+            sim.run()
         summary = sink.summary() if spec.summary_records else None
         return RunResult(spec, sink.result(sim),
-                         elapsed_s=time.perf_counter() - t0, summary=summary)
+                         elapsed_s=time.perf_counter() - t0, summary=summary,
+                         decision_trace=trace)
     if isinstance(wl, Scenario):
         jobs, n_nodes = wl.realize(seed=spec.seed)
     else:
@@ -150,11 +165,13 @@ def _execute(spec: RunSpec) -> RunResult:
     cfg = SimConfig(n_nodes=n_nodes, mechanism=spec.mechanism,
                     **_sim_kw(spec))
     sim = Simulator(cfg, jobs)
-    sim.run()
+    with cap as trace:
+        sim.run()
     summary = (summarize_records(sim.records, spec.summary_records)
                if spec.summary_records else None)
     return RunResult(spec, collect(sim),
-                     elapsed_s=time.perf_counter() - t0, summary=summary)
+                     elapsed_s=time.perf_counter() - t0, summary=summary,
+                     decision_trace=trace)
 
 
 @dataclass
@@ -181,6 +198,18 @@ class Experiment:
     #: Identical job-for-job simulation; metric means match to float
     #: accumulation order, record summaries become sketch-backed.
     stream: bool = False
+    #: "jax": capture each cell's decision stream and replay the whole
+    #: grid as ONE jitted device program after the sweep, parity-checked
+    #: per cell against the numpy engine (the identity baseline — the
+    #: metrics always come from the numpy simulation).  The
+    #: DeviceSweepReport lands on ExperimentResult.device_report.
+    #: None (default): plain process fan-out, no capture.
+    device: Optional[str] = None
+    #: calls captured per kernel per cell when device dispatch is on
+    device_capture: int = 256
+    #: device replay precision: "float64" (exact parity gate) or
+    #: "float32" (documented-tolerance fallback; see decision_jax)
+    device_dtype: str = "float64"
 
     def _scaled(self, wl: Union[WorkloadConfig, Scenario]
                 ) -> Union[WorkloadConfig, Scenario]:
@@ -197,7 +226,11 @@ class Experiment:
         return replace(wl, params=params) if params != wl.params else wl
 
     def specs(self) -> Iterator[RunSpec]:
+        if self.device not in (None, "jax"):
+            raise ValueError(
+                f"device must be None or 'jax', got {self.device!r}")
         frozen_kw = tuple(sorted(self.sim_kw.items()))
+        capture = self.device_capture if self.device else 0
         for wl in self.workloads:
             if isinstance(wl, str):  # preset name -> Scenario
                 wl = get_scenario(wl)
@@ -205,7 +238,8 @@ class Experiment:
             for mech in self.mechanisms:
                 for seed in self.seeds:
                     yield RunSpec(mech, wl, seed, frozen_kw,
-                                  self.record_summary, self.stream)
+                                  self.record_summary, self.stream,
+                                  capture)
 
     def _validated_specs(self) -> List[RunSpec]:
         # fail fast on typos with the registry-listing ValueError (worker
@@ -333,9 +367,26 @@ class Experiment:
             yield result
 
     def run(self) -> "ExperimentResult":
-        """Run the sweep and collect the compact rows in grid order."""
+        """Run the sweep and collect the compact rows in grid order.
+
+        With ``device="jax"`` the captured decision streams are then
+        replayed as one jitted device program and the resulting
+        :class:`~repro.core.decision_jax.DeviceSweepReport` is attached
+        as ``result.device_report`` (metrics are untouched — the numpy
+        engine stays the identity baseline).
+        """
+        if self.device == "jax":
+            # fail on a missing jax before paying for the sweep
+            from . import decision_jax
         indexed = sorted(self._stream(), key=lambda it: it[0])
-        return ExperimentResult([r for _i, r in indexed])
+        result = ExperimentResult([r for _i, r in indexed])
+        if self.device == "jax":
+            cells = [(f"{r.spec.mechanism}/{r.spec.key(('scenario',))[0]}"
+                      f"/s{r.spec.seed}", r.decision_trace)
+                     for r in result.runs if r.decision_trace is not None]
+            result.device_report = decision_jax.run_device_sweep(
+                cells, dtype=self.device_dtype)
+        return result
 
 
 class ExperimentResult:
@@ -343,6 +394,8 @@ class ExperimentResult:
 
     def __init__(self, runs: List[RunResult]):
         self.runs = runs
+        #: DeviceSweepReport when the sweep ran with device dispatch
+        self.device_report = None
 
     def __iter__(self) -> Iterator[RunResult]:
         return iter(self.runs)

@@ -42,6 +42,7 @@ accepts the preset name string directly.
 from __future__ import annotations
 
 import hashlib
+import logging
 import os
 from dataclasses import dataclass, field, replace
 from typing import Callable, Dict, Iterable, Iterator, List, Optional, \
@@ -50,6 +51,13 @@ from typing import Callable, Dict, Iterable, Iterator, List, Optional, \
 import numpy as np
 
 from ..job import JobSpec
+
+log = logging.getLogger(__name__)
+
+#: scenario labels already warned about losing the bounded-memory
+#: guarantee (one structured warning per scenario per process, so a
+#: thousand-cell sweep does not emit a thousand copies)
+_WARNED_MATERIALIZED: set = set()
 
 
 class UnknownWorkloadError(ValueError):
@@ -422,6 +430,20 @@ class Scenario:
         if seed is None:
             seed = self.seed
         if not self.streamable:
+            _ensure_builtins()
+            blocking = [t for t, _ in self.transforms
+                        if not getattr(_TRANSFORMS.get(t, ScenarioTransform),
+                                       "streamable", False)]
+            key = (self.label, tuple(blocking))
+            if key not in _WARNED_MATERIALIZED:
+                _WARNED_MATERIALIZED.add(key)
+                log.warning(
+                    "Scenario %r: transform(s) %s are not streamable; "
+                    "iter_realize falls back to materializing the full "
+                    "trace internally — this run does NOT have the "
+                    "bounded-memory streaming guarantee (see "
+                    "docs/workloads.md#streaming-and-the-type_mix-fallback)",
+                    self.label, ", ".join(repr(t) for t in blocking))
             jobs, n_nodes = self.realize(seed)
             return iter(jobs), n_nodes
         params = {k: v for k, v in self.params.items() if k != "seed"}

@@ -13,6 +13,7 @@ waste), O(S * block) live memory, O(log S) HLO size.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 import math
 from typing import Optional, Tuple
@@ -45,6 +46,38 @@ def tpu_memory_space(name: str):
     if enum is None:
         enum = pltpu.TPUMemorySpace
     return getattr(enum, name)
+
+
+def x64_enabled() -> bool:
+    """Whether float64/int64 are live JAX types right now (global flag or
+    an enclosing :func:`enable_x64` scope)."""
+    return bool(jax.config.jax_enable_x64)
+
+
+def enable_x64(enable: bool = True):
+    """Version-compat scoped x64 switch.
+
+    The scheduler decision kernels (repro.core.decision_jax) need exact
+    float64 parity with their numpy references without flipping the
+    global ``jax_enable_x64`` flag — the model/kernel suites in the same
+    process rely on float32/bf16 canonicalization.  Prefers the
+    thread-local ``jax.experimental.enable_x64`` context manager and
+    falls back to saving/restoring the global flag on JAX versions
+    without it.
+    """
+    ctx = getattr(jax.experimental, "enable_x64", None)
+    if ctx is not None:
+        return ctx(enable)
+
+    @contextlib.contextmanager
+    def _flag_scope():
+        prev = bool(jax.config.jax_enable_x64)
+        jax.config.update("jax_enable_x64", enable)
+        try:
+            yield
+        finally:
+            jax.config.update("jax_enable_x64", prev)
+    return _flag_scope()
 
 
 def set_backend(name: Optional[str]) -> None:

@@ -5,4 +5,5 @@ collect_ignore = []
 try:
     import jax  # noqa: F401
 except Exception:
-    collect_ignore = ["test_archs.py", "test_kernels.py", "test_runtime.py"]
+    collect_ignore = ["test_archs.py", "test_decision_jax.py",
+                      "test_kernels.py", "test_runtime.py"]

@@ -77,9 +77,28 @@ def test_apportion_respects_per_job_slack_cap():
     assert all(s <= c - m for s, c, m in zip(sheds, [20, 4], [2, 3]))
 
 
+@pytest.mark.parametrize("cur, need", [
+    # regression: need * slack overflows int64, wrapping into garbage
+    # quotas whose clamped floors left a shortfall larger than the
+    # number of jobs with fractional slack — the single-pass largest
+    # remainder then promoted -inf entries and tripped the sum assert
+    ([65045927626, 68844673057], 52072923076),
+    ([26978671376, 4097352393, 1652763552, 81327023920, 91275557727],
+     124561354304),
+    ([32186939107, 59430003019], 30958393192),
+])
+def test_apportion_huge_slack_overflow_regression(cur, need):
+    sheds = apportion_shrink(cur, [0] * len(cur), need)
+    assert sum(sheds) == need
+    assert all(0 <= s <= c for s, c in zip(sheds, cur))
+
+
 # -------------------------------------------------------------- easy_shadow
 def _shadow_reference(avail, need, bases, sizes, now):
-    """The legacy Python loop easy_shadow replaced."""
+    """The legacy Python loop easy_shadow replaced (plus the hardened
+    avail-already-covers fast path: the head starts now, no release)."""
+    if avail >= need:
+        return now, avail - need
     rel = sorted((max(b, now), s) for b, s in zip(bases, sizes))
     for t, k in rel:
         avail += k
@@ -115,6 +134,17 @@ def test_easy_shadow_exact_cover_and_tie_order():
 def test_easy_shadow_insufficient_supply_is_infinite():
     assert easy_shadow(0, 100, [1.0], [10], 0.0) == (math.inf, 0)
     assert easy_shadow(0, 1, [], [], 0.0) == (math.inf, 0)
+
+
+def test_easy_shadow_avail_covers_need_regression():
+    # regression: empty running set with avail >= need used to walk
+    # searchsorted off the empty cumsum and misreport an immediately
+    # startable head as (inf, 0)
+    assert easy_shadow(5, 3, [], [], 7.0) == (7.0, 2)
+    assert easy_shadow(3, 3, [], [], 0.0) == (0.0, 0)
+    # same fast path with running jobs present: the head starts now,
+    # no release needs to be awaited
+    assert easy_shadow(10, 4, [99.0, 50.0], [8, 8], 2.5) == (2.5, 6)
 
 
 # ------------------------------------------------------- backfill prefilter

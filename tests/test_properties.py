@@ -95,6 +95,21 @@ def test_spaa_apportion_properties(jobs, need):
             assert s == 0
 
 
+@given(st.lists(st.integers(0, 10**11), min_size=1, max_size=16),
+       st.data())
+@settings(max_examples=200, deadline=None)
+def test_spaa_apportion_never_asserts_at_any_scale(slacks, data):
+    # regression scale: need * slack overflows int64 here, which used to
+    # wrap into garbage quotas and trip the sum assert; with supply >=
+    # need the kernel must always terminate with an exact sum
+    supply = sum(slacks)
+    need = data.draw(st.integers(0, supply))
+    sheds = apportion_shrink(slacks, [0] * len(slacks), need)
+    assert sum(sheds) == (need if need > 0 else 0)
+    for s, c in zip(sheds, slacks):
+        assert 0 <= s <= c
+
+
 # ------------------------------------------------------------ property: drain
 @given(seed=st.integers(0, 10_000),
        mech=st.sampled_from(("BASE",) + MECHANISMS + EXTRA_MECHANISMS))

@@ -120,6 +120,28 @@ def test_streamable_classification():
     assert not Scenario("theta", transforms=(("type_mix", {}),)).streamable
 
 
+def test_materialized_fallback_warns_once_naming_transform(caplog):
+    import logging
+
+    from repro.core.workloads import base as wl_base
+
+    sc = Scenario("theta", params={"n_jobs": 50},
+                  transforms=(("type_mix", {"frac_od": 0.3}),))
+    wl_base._WARNED_MATERIALIZED.clear()
+    with caplog.at_level(logging.WARNING, logger="repro.core.workloads.base"):
+        list(sc.iter_realize(0)[0])
+        list(sc.iter_realize(1)[0])  # second run: already warned
+    warned = [r for r in caplog.records if "not streamable" in r.message]
+    assert len(warned) == 1
+    assert "type_mix" in warned[0].getMessage()
+    assert "bounded-memory" in warned[0].getMessage()
+    # streamable stacks never warn
+    caplog.clear()
+    with caplog.at_level(logging.WARNING, logger="repro.core.workloads.base"):
+        list(Scenario("theta", params={"n_jobs": 50}).iter_realize(0)[0])
+    assert not [r for r in caplog.records if "not streamable" in r.message]
+
+
 # --------------------------------------------------- simulator: iterator feed
 def _record_tuples(records):
     return sorted((r.job.jid, r.first_start, r.completion, r.killed,
